@@ -1,0 +1,61 @@
+"""Pallas-kernel micro-benchmarks (interpret mode on CPU: numerics + shape
+validation; wall times are meaningful relatively, not as TPU projections).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _time(fn, *args, iters=3):
+    fn(*args).block_until_ready()          # compile + warm
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6   # us
+
+
+def bench_kernels():
+    from repro.kernels import ref
+    from repro.kernels.flash_attention import flash_attention
+    from repro.kernels.decode_attention import decode_attention
+    from repro.kernels.iou import iou_matrix
+    rows = []
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+
+    B, H, T, D = 1, 4, 512, 64
+    q = jax.random.normal(ks[0], (B, H, T, D))
+    k = jax.random.normal(ks[1], (B, H, T, D))
+    v = jax.random.normal(ks[2], (B, H, T, D))
+    rows.append(("flash_attention_pallas",
+                 _time(lambda a, b, c: flash_attention(a, b, c,
+                                                       interpret=True),
+                       q, k, v), f"{B}x{H}x{T}x{D}"))
+    rows.append(("flash_attention_ref",
+                 _time(jax.jit(ref.flash_attention_ref), q, k, v),
+                 f"{B}x{H}x{T}x{D}"))
+
+    B, H, KV, S, D = 2, 16, 4, 2048, 64
+    q1 = jax.random.normal(ks[0], (B, H, D))
+    k1 = jax.random.normal(ks[1], (B, S, KV, D))
+    v1 = jax.random.normal(ks[2], (B, S, KV, D))
+    rows.append(("decode_attention_pallas",
+                 _time(lambda a, b, c: decode_attention(a, b, c,
+                                                        interpret=True),
+                       q1, k1, v1), f"cache={S}"))
+    rows.append(("decode_attention_ref",
+                 _time(jax.jit(ref.decode_attention_ref), q1, k1, v1),
+                 f"cache={S}"))
+
+    bx = jnp.asarray(np.random.default_rng(0).uniform(0, 100, (256, 4)),
+                     jnp.float32)
+    rows.append(("iou_matrix_pallas",
+                 _time(lambda a: iou_matrix(a, a, interpret=True), bx),
+                 "256x256"))
+    rows.append(("iou_matrix_ref",
+                 _time(jax.jit(ref.iou_matrix_ref), bx, bx), "256x256"))
+    return rows

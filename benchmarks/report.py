@@ -1,0 +1,62 @@
+"""Render EXPERIMENTS.md §Dry-run and §Roofline tables from the artifacts
+in experiments/dryrun/.
+
+  PYTHONPATH=src python -m benchmarks.report
+"""
+from __future__ import annotations
+
+import json
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+from benchmarks import roofline  # noqa: E402
+
+DRYRUN = Path(__file__).resolve().parents[1] / "experiments" / "dryrun"
+HBM_GB = 16.0   # v5e
+
+
+def dryrun_table():
+    print("| arch | shape | mesh | params | args/dev | temp/dev | "
+          "flops/dev | coll B/dev | fits 16G |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    for f in sorted(DRYRUN.glob("*.json")):
+        d = json.loads(f.read_text())
+        if d.get("skipped"):
+            print(f"| {d['arch']} | {d['shape']} | {d['mesh']} | — | — | — "
+                  f"| — | — | skip: {d['reason'][:32]} |")
+            continue
+        if "error" in d:
+            print(f"| {d['arch']} | {d['shape']} | {d['mesh']} | — | "
+                  f"FAIL: {d['error'][:40]} |")
+            continue
+        mem = d["memory"]
+        args = mem["argument_size_in_bytes"] / 1e9
+        temp = mem["temp_size_in_bytes"] / 1e9
+        hc = d.get("hlo_cost", {})
+        fits = "✅" if args + temp <= HBM_GB else f"{args+temp:.0f} GB ⚠️"
+        print(f"| {d['arch']} | {d['shape']} | {d['mesh']} "
+              f"| {d['n_params']/1e9:.1f}B | {args:.2f} GB | {temp:.2f} GB "
+              f"| {hc.get('flops', 0):.2e} "
+              f"| {d['collectives']['total_bytes']:.2e} | {fits} |")
+
+
+def main():
+    which = sys.argv[1] if len(sys.argv) > 1 else "all"
+    if which in ("all", "dryrun"):
+        print("### Dry-run matrix\n")
+        dryrun_table()
+        print()
+    if which in ("all", "roofline"):
+        print("### Roofline (single-pod 16x16)\n")
+        rows = roofline.table("single")
+        print(roofline.render(rows))
+        print()
+        print("### Roofline (multi-pod 2x16x16)\n")
+        rows = roofline.table("multi")
+        print(roofline.render(rows))
+
+
+if __name__ == "__main__":
+    main()

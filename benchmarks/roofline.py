@@ -1,0 +1,145 @@
+"""Roofline analysis over the dry-run artifacts (experiments/dryrun/).
+
+Per (arch x shape x mesh):
+    compute_s    = HLO_FLOPs_per_device / peak_FLOPs_per_chip
+    memory_s     = HLO_bytes_per_device / HBM_bw
+    collective_s = collective_bytes_per_device / ICI_link_bw
+
+(cost_analysis / the partitioned HLO report per-device quantities, so the
+per-chip denominators apply directly — equivalent to the global/chips
+formulation.)  MODEL_FLOPS uses 6·N_active·D for training and 2·N_active·D
+for inference, with N_active discounting inactive experts for MoE.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+# TPU v5e-class hardware constants (per chip)
+PEAK_FLOPS = 197e12        # bf16
+HBM_BW = 819e9             # bytes/s
+ICI_BW = 50e9              # bytes/s per link
+
+DRYRUN_DIR = Path(__file__).resolve().parents[1] / "experiments" / "dryrun"
+
+HINTS = {
+    "compute": ("compute-bound: raise per-chip utilization — larger "
+                "per-device token batch, fuse elementwise chains, MXU-"
+                "aligned tile shapes"),
+    "memory": ("memory-bound: cut HBM traffic — remat policy tuning, "
+               "fused attention (no score materialization), bf16 "
+               "activations, larger scan chunks"),
+    "collective": ("collective-bound: reshard to shrink cross-chip bytes "
+                   "— overlap collectives with compute, reduce-scatter "
+                   "instead of all-reduce, keep weights resident"),
+}
+
+
+def active_params(arch: str, kind: str) -> float:
+    """N (dense) or N_active (MoE: only top-k + shared experts count)."""
+    from repro.configs import get_config
+    from repro.models import init_model
+    cfg = get_config(arch, "full")
+    struct = jax.eval_shape(lambda k: init_model(cfg, k),
+                            jax.ShapeDtypeStruct((2,), jnp.uint32))
+    flat = jax.tree_util.tree_flatten_with_path(struct)[0]
+    total = 0.0
+    for kp, leaf in flat:
+        path = jax.tree_util.keystr(kp)
+        n = 1
+        for s in leaf.shape:
+            n *= s
+        if "experts" in path and cfg.moe:
+            n *= (cfg.moe.top_k / cfg.moe.n_experts)
+        total += n
+    return total
+
+
+def tokens_for(shape: str) -> float:
+    from repro.configs import SHAPES
+    sh = SHAPES[shape]
+    if sh.kind == "decode":
+        return sh.global_batch            # one new token per sequence
+    return sh.global_batch * sh.seq_len
+
+
+def analyze(record: dict) -> dict:
+    cost, coll = record["cost"], record["collectives"]
+    # prefer the trip-count-aware HLO walk (repro.hlo); XLA-CPU's own
+    # cost_analysis counts scan bodies once (see EXPERIMENTS.md §Roofline)
+    hc = record.get("hlo_cost", {})
+    flops = hc.get("flops") or cost.get("flops", 0.0)
+    byts = hc.get("bytes") or cost.get("bytes accessed", 0.0)
+    chips = 1
+    for v in record["mesh"].values():
+        chips *= v
+    compute_s = flops / PEAK_FLOPS
+    memory_s = byts / HBM_BW
+    collective_s = coll["total_bytes"] / ICI_BW
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": collective_s}
+    dominant = max(terms, key=terms.get)
+    factor = 6.0 if record["kind"] == "train" else 2.0
+    model_flops = factor * active_params(record["arch"],
+                                         record["kind"]) \
+        * tokens_for(record["shape"])
+    hlo_total = flops * chips
+    return {
+        **{f"{k}_s": v for k, v in terms.items()},
+        "dominant": dominant,
+        "model_flops": model_flops,
+        "hlo_flops_total": hlo_total,
+        "useful_ratio": model_flops / hlo_total if hlo_total else 0.0,
+        "chips": chips,
+        "hint": HINTS[dominant],
+    }
+
+
+def load_records(mesh: str = "single"):
+    out = []
+    for f in sorted(DRYRUN_DIR.glob(f"*__{mesh}.json")):
+        d = json.loads(f.read_text())
+        if "error" in d or d.get("skipped"):
+            continue
+        out.append(d)
+    return out
+
+
+def table(mesh: str = "single"):
+    rows = []
+    for rec in load_records(mesh):
+        a = analyze(rec)
+        rows.append({
+            "arch": rec["arch"], "shape": rec["shape"],
+            "variant": rec.get("variant"), **a,
+        })
+    return rows
+
+
+def render(rows) -> str:
+    hdr = (f"| {'arch':24s} | {'shape':11s} | compute_s | memory_s | "
+           f"collect_s | dominant | useful |")
+    sep = "|" + "-" * 26 + "|" + "-" * 13 + "|" + "-" * 11 + "|" + "-" * 10 \
+        + "|" + "-" * 11 + "|" + "-" * 10 + "|" + "-" * 8 + "|"
+    lines = [hdr, sep]
+    for r in rows:
+        lines.append(
+            f"| {r['arch']:24s} | {r['shape']:11s} | {r['compute_s']:9.2e} "
+            f"| {r['memory_s']:8.2e} | {r['collective_s']:9.2e} "
+            f"| {r['dominant']:8s} | {r['useful_ratio']:6.2f} |")
+    return "\n".join(lines)
+
+
+def main():
+    rows = table("single")
+    print(render(rows))
+    out = DRYRUN_DIR.parent / "roofline_single.json"
+    out.write_text(json.dumps(rows, indent=1))
+    print(f"\nwrote {out}")
+
+
+if __name__ == "__main__":
+    main()

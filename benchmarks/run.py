@@ -1,0 +1,82 @@
+"""Benchmark harness: one function per paper table + kernel micro-benches
++ the roofline summary.  Prints ``name,us_per_call,derived`` CSV rows (and
+detailed per-table CSV blocks as comments).
+
+  PYTHONPATH=src python -m benchmarks.run [--only table_iv,...]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+from benchmarks import tables  # noqa: E402
+
+
+def _run_table(name, fn):
+    t0 = time.perf_counter()
+    rows, derived = fn()
+    us = (time.perf_counter() - t0) * 1e6
+    print(f"{name},{us:.0f},{derived:.3f}")
+    if rows:
+        cols = list(rows[0].keys())
+        print(f"# {name}: " + ",".join(cols))
+        for r in rows:
+            print("#   " + ",".join(_fmt(r.get(c, "")) for c in cols))
+    return rows
+
+
+def _fmt(v):
+    if isinstance(v, float):
+        return f"{v:.2f}"
+    return str(v)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated benchmark names")
+    args = ap.parse_args()
+
+    benches = {
+        "drop_analysis": tables.drop_analysis,     # §II / Fig 2-3
+        "table_iv": tables.table_iv,               # ETH-Sunnyday FPS+mAP
+        "table_v": tables.table_v,                 # ADL-Rundle-6 FPS+mAP
+        "table_vi": tables.table_vi,               # energy FPS/W
+        "table_vii": tables.table_vii,             # RR vs FCFS
+        "table_ix": tables.table_ix,               # USB 2.0 vs 3.0
+        "table_x": tables.table_x,                 # Python vs C++
+        "hetero_models": tables.hetero_models,     # beyond-paper (§V)
+    }
+    names = (args.only.split(",") if args.only else
+             list(benches) + ["kernels", "roofline"])
+
+    print("name,us_per_call,derived")
+    for name in names:
+        if name in benches:
+            _run_table(name, benches[name])
+
+    if "kernels" in names:
+        from benchmarks.kernel_bench import bench_kernels
+        for name, us, derived in bench_kernels():
+            print(f"{name},{us:.0f},{derived}")
+
+    if "roofline" in names:
+        try:
+            from benchmarks import roofline
+            rows = roofline.table("single")
+            if rows:
+                worst = min(rows, key=lambda r: r["useful_ratio"])
+                print(f"roofline_summary,0,{len(rows)}")
+                print(f"# worst useful-FLOP ratio: {worst['arch']} x "
+                      f"{worst['shape']} = {worst['useful_ratio']:.3f} "
+                      f"({worst['dominant']}-bound)")
+        except Exception as e:  # noqa: BLE001 — roofline needs dry-run data
+            print(f"# roofline skipped: {e}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,178 @@
+"""One benchmark per paper table.  Each function returns (rows, derived)
+where rows are CSV-ish dicts and derived is the table's headline number.
+Paper reference values are embedded for side-by-side comparison."""
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+from repro.core import (DEVICE_PROFILES, MODEL_PROFILES, ParallelDetector,
+                        n_range)
+
+PAPER_TABLE_IV = {   # ETH-Sunnyday: (model, n) -> (fps, map%)
+    ("yolov3", 0): (2.5, 86.9), ("ssd300", 0): (2.3, 74.5),
+    ("yolov3", 1): (2.5, 66.1), ("ssd300", 1): (2.3, 69.0),
+    ("yolov3", 4): (10.0, 86.5), ("ssd300", 4): (9.2, 77.5),
+    ("yolov3", 7): (17.3, 86.9), ("ssd300", 7): (16.0, 74.5),
+}
+PAPER_TABLE_V = {
+    ("yolov3", 0): (2.5, 62.5), ("ssd300", 0): (2.3, 54.4),
+    ("yolov3", 1): (2.5, 42.7), ("ssd300", 1): (2.3, 46.7),
+    ("yolov3", 4): (10.0, 62.7), ("ssd300", 4): (9.1, 55.4),
+    ("yolov3", 7): (17.3, 62.7), ("ssd300", 7): (16.0, 54.7),
+}
+
+
+def _parallel_table(video: str, paper_ref: Dict) -> List[Dict]:
+    rows = []
+    for model in ("ssd300", "yolov3"):
+        off = ParallelDetector(video, model, ["ncs2"], "fcfs").run(
+            offline=True)
+        rows.append(dict(video=video, model=model, n=0, mode="offline",
+                         fps=off.sigma, map=off.map_score * 100,
+                         paper_fps=paper_ref.get((model, 0), ("", ""))[0],
+                         paper_map=paper_ref.get((model, 0), ("", ""))[1]))
+        for n in range(1, 8):
+            r = ParallelDetector(video, model, ["ncs2"] * n, "fcfs").run()
+            ref = paper_ref.get((model, n), ("", ""))
+            rows.append(dict(video=video, model=model, n=n, mode="online",
+                             fps=r.sigma, map=r.map_score * 100,
+                             drops_per_processed=r.drops_per_processed,
+                             paper_fps=ref[0], paper_map=ref[1]))
+    return rows
+
+
+def table_iv():
+    """Parallel detection with n NCS2 sticks, ETH-Sunnyday (14 FPS)."""
+    rows = _parallel_table("ETH-Sunnyday", PAPER_TABLE_IV)
+    n7 = [r for r in rows if r["n"] == 7 and r["model"] == "yolov3"][0]
+    return rows, n7["fps"]
+
+
+def table_v():
+    """Parallel detection with n NCS2 sticks, ADL-Rundle-6 (30 FPS)."""
+    rows = _parallel_table("ADL-Rundle-6", PAPER_TABLE_V)
+    n7 = [r for r in rows if r["n"] == 7 and r["model"] == "yolov3"][0]
+    return rows, n7["fps"]
+
+
+def table_vi():
+    """Energy efficiency: detection FPS per watt (YOLOv3, zero-drop)."""
+    paper = {"ncs2": (2, 2.5, 1.25), "slow_cpu": (15, 0.4, 0.03),
+             "fast_cpu": (125, 13.5, 0.11), "gpu_titanx": (250, 35, 0.14)}
+    rows = []
+    for name, dev in DEVICE_PROFILES.items():
+        mu = dev.mu("yolov3")
+        rows.append(dict(device=name, tdp_w=dev.tdp_watts, fps=mu,
+                         fps_per_watt=mu / dev.tdp_watts,
+                         paper_fps_per_watt=paper[name][2]))
+    best = max(rows, key=lambda r: r["fps_per_watt"])
+    assert best["device"] == "ncs2", "paper: NCS2 is most energy-efficient"
+    return rows, best["fps_per_watt"]
+
+
+def table_vii():
+    """RR vs FCFS schedulers on heterogeneous edge devices (YOLOv3)."""
+    paper = {
+        ("rr", "fast_cpu", 7): 20.1, ("fcfs", "fast_cpu", 7): 29.0,
+        ("rr", "slow_cpu", 7): 3.4, ("fcfs", "slow_cpu", 7): 17.9,
+        ("rr", None, 7): 17.3, ("fcfs", None, 7): 17.3,
+    }
+    rows = []
+    for sched in ("rr", "fcfs", "wrr", "proportional"):
+        for cpu in (None, "fast_cpu", "slow_cpu"):
+            for n in (1, 3, 7):
+                devs = ([cpu] if cpu else []) + ["ncs2"] * n
+                r = ParallelDetector("ETH-Sunnyday", "yolov3", devs,
+                                     sched).run(with_map=False)
+                rows.append(dict(scheduler=sched, cpu=cpu or "none",
+                                 n_ncs2=n, fps=r.sigma,
+                                 paper_fps=paper.get((sched, cpu, n), "")))
+    fcfs7 = [r for r in rows if r["scheduler"] == "fcfs"
+             and r["cpu"] == "fast_cpu" and r["n_ncs2"] == 7][0]
+    return rows, fcfs7["fps"]
+
+
+def table_ix():
+    """Host->accelerator interface bandwidth impact (USB 2.0 vs 3.0)."""
+    paper = {("yolov3", "usb2", 7): 8.1, ("yolov3", "usb3", 7): 17.3,
+             ("ssd300", "usb2", 7): 13.2, ("ssd300", "usb3", 7): 16.0}
+    rows = []
+    for model in ("ssd300", "yolov3"):
+        for iface in ("usb2", "usb3"):
+            for n in (1, 3, 5, 7):
+                r = ParallelDetector("ETH-Sunnyday", model, ["ncs2"] * n,
+                                     "fcfs", interface=iface).run(
+                    with_map=False)
+                # shared-hub aggregate goodput cap
+                from repro.core.executor import INTERFACE_GOODPUT
+                cap = INTERFACE_GOODPUT[iface] / \
+                    MODEL_PROFILES[model].frame_bytes
+                fps = min(r.sigma, cap)
+                rows.append(dict(model=model, interface=iface, n=n,
+                                 fps=fps,
+                                 paper_fps=paper.get((model, iface, n), "")))
+    sat = [r for r in rows if r["model"] == "yolov3"
+           and r["interface"] == "usb2" and r["n"] == 7][0]
+    return rows, sat["fps"]
+
+
+def table_x():
+    """Host-language serialization (Python GIL vs C++ threads)."""
+    paper = {("python", 1): 4.8, ("python", 7): 9.7,
+             ("cpp", 1): 4.5, ("cpp", 7): 32.4}
+    # Table X uses the async inference API (~2 requests in flight per
+    # stick => per-stick rate ~4.7 FPS); the language effect is the host
+    # dispatch serialization term.
+    rows = []
+    fast_ncs2 = DEVICE_PROFILES["ncs2"]
+    import dataclasses
+    async_dev = dataclasses.replace(fast_ncs2,
+                                    fps={"yolov3": 4.7, "ssd300": 4.4})
+    from repro.core import DetectorExecutor, FrameStream, SyntheticVideo
+    from repro.core import make_scheduler, simulate
+    from repro.core.stream import ADL_RUNDLE_6
+    for lang, host in (("python", 0.102), ("cpp", 0.002)):
+        for n in (1, 2, 3, 5, 7):
+            execs = [DetectorExecutor(async_dev, MODEL_PROFILES["yolov3"])
+                     for _ in range(n)]
+            sched = make_scheduler("fcfs", execs, host_overhead=host)
+            res = simulate(FrameStream(SyntheticVideo(ADL_RUNDLE_6)), sched,
+                           offline=True)
+            rows.append(dict(language=lang, n=n, fps=res.sigma,
+                             paper_fps=paper.get((lang, n), "")))
+    cpp7 = [r for r in rows if r["language"] == "cpp" and r["n"] == 7][0]
+    return rows, cpp7["fps"]
+
+
+def drop_analysis():
+    """§II: λ vs μ mismatch -> drop rate & n-selection (Fig 2/3 analysis)."""
+    rows = []
+    for lam, mu in ((14.0, 2.5), (30.0, 2.5), (30.0, 2.3)):
+        lo, hi = n_range(lam, mu)
+        import math
+        rows.append(dict(lam=lam, mu=mu,
+                         drops_per_processed=math.ceil(lam / mu - 1),
+                         n_near_real_time=lo, n_conservative=hi))
+    return rows, rows[0]["drops_per_processed"]
+
+
+def hetero_models():
+    """Beyond-paper (§V ongoing work): heterogeneous models x devices."""
+    rows = []
+    mixes = [
+        ("yolo@cpu+4xssd@ncs2", ["yolov3"] + ["ssd300"] * 4,
+         ["fast_cpu"] + ["ncs2"] * 4),
+        ("4xssd@ncs2", ["ssd300"] * 4, ["ncs2"] * 4),
+        ("4xyolo@ncs2", ["yolov3"] * 4, ["ncs2"] * 4),
+        ("yolo@cpu+4xyolo@ncs2", ["yolov3"] * 5,
+         ["fast_cpu"] + ["ncs2"] * 4),
+    ]
+    for name, models, devices in mixes:
+        for sched in ("rr", "fcfs"):
+            r = ParallelDetector("ETH-Sunnyday", models, devices,
+                                 sched).run()
+            rows.append(dict(mix=name, scheduler=sched, fps=r.sigma,
+                             map=r.map_score * 100))
+    best = max(rows, key=lambda r: r["fps"])
+    return rows, best["fps"]

@@ -1,0 +1,5 @@
+from .base import (ARCH_IDS, SHAPES, SWA_WINDOW, InputShape, get_config,
+                   supported_shapes)
+
+__all__ = ["ARCH_IDS", "SHAPES", "SWA_WINDOW", "InputShape", "get_config",
+           "supported_shapes"]

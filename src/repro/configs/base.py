@@ -1,0 +1,72 @@
+"""Config registry + the four assigned input shapes.
+
+Every architecture module exposes ``make_config(preset, variant)``:
+  preset  "full"  — the exact assigned configuration (dry-run only)
+          "smoke" — reduced same-family variant (≤2 layers-ish, d_model≤512,
+                    ≤4 experts) that runs a real step on CPU
+  variant None    — paper-faithful full attention
+          "swa"   — sliding-window decode variant (window 4096) enabling
+                    long_500k for full-attention architectures (beyond-paper)
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Optional
+
+from ..models.config import ModelConfig
+
+SWA_WINDOW = 4096
+
+
+@dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                 # "train" | "prefill" | "decode"
+
+
+SHAPES = {
+    "train_4k": InputShape("train_4k", 4096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524288, 1, "decode"),
+}
+
+ARCH_IDS = [
+    "hubert-xlarge", "chatglm3-6b", "jamba-v0.1-52b", "qwen3-4b",
+    "deepseek-v3-671b", "rwkv6-3b", "mistral-nemo-12b", "grok-1-314b",
+    "pixtral-12b", "minicpm-2b",
+]
+
+
+def get_config(arch: str, preset: str = "full",
+               variant: Optional[str] = None) -> ModelConfig:
+    import importlib
+    mod = importlib.import_module(
+        f"repro.configs.{arch.replace('-', '_').replace('.', '_')}")
+    return mod.make_config(preset=preset, variant=variant)
+
+
+def supported_shapes(cfg: ModelConfig, variant: Optional[str] = None):
+    """Which of the four shapes this (arch, variant) runs — with skips as
+    documented in DESIGN.md §Arch-applicability."""
+    out = ["train_4k", "prefill_32k"]
+    if cfg.encoder_only:
+        return out                       # encoder-only: no decode step
+    out.append("decode_32k")
+    subquadratic = cfg.attn_free or _is_hybrid(cfg) or variant == "swa" \
+        or cfg.decode_window is not None
+    if subquadratic:
+        out.append("long_500k")
+    return out
+
+
+def _is_hybrid(cfg: ModelConfig) -> bool:
+    mixers = {l.mixer for s in cfg.stages for l in s.pattern}
+    return "mamba" in mixers or "rwkv" in mixers
+
+
+def smoke_shrink(cfg: ModelConfig, **extra) -> ModelConfig:
+    return dataclasses.replace(cfg, **extra)

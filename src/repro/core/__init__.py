@@ -1,0 +1,21 @@
+from .stream import (BENCHMARK_VIDEOS, ADL_RUNDLE_6, ETH_SUNNYDAY,
+                     Frame, FrameStream, SyntheticVideo, VideoSpec)
+from .executor import (DEVICE_PROFILES, MODEL_PROFILES, DetectorExecutor,
+                       DeviceProfile, ModelProfile)
+from .scheduler import (FCFSScheduler, LockstepRRScheduler,
+                        ProportionalScheduler, WeightedRRScheduler,
+                        make_scheduler)
+from .simulator import SimResult, simulate
+from .synchronizer import SequenceSynchronizer, SyncedFrame
+from .parallel import ParallelDetector, choose_n, n_range
+from .quality import ProxyDetector, evaluate_map
+
+__all__ = [
+    "BENCHMARK_VIDEOS", "ADL_RUNDLE_6", "ETH_SUNNYDAY", "Frame",
+    "FrameStream", "SyntheticVideo", "VideoSpec", "DEVICE_PROFILES",
+    "MODEL_PROFILES", "DetectorExecutor", "DeviceProfile", "ModelProfile",
+    "FCFSScheduler", "LockstepRRScheduler", "ProportionalScheduler",
+    "WeightedRRScheduler", "make_scheduler", "SimResult", "simulate",
+    "SequenceSynchronizer", "SyncedFrame", "ParallelDetector", "choose_n",
+    "n_range", "ProxyDetector", "evaluate_map",
+]

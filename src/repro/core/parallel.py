@@ -1,0 +1,129 @@
+"""Parallel detection controller: n-selection (paper §III-B) + the
+end-to-end pipeline facade (stream -> scheduler -> executors ->
+synchronizer -> quality/FPS report).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import List, Optional, Sequence
+
+from .executor import (DEVICE_PROFILES, MODEL_PROFILES, DetectorExecutor,
+                       DeviceProfile)
+from .quality import ProxyDetector, evaluate_map
+from .scheduler import make_scheduler
+from .simulator import SimResult, simulate
+from .stream import BENCHMARK_VIDEOS, FrameStream, SyntheticVideo, VideoSpec
+from .synchronizer import SequenceSynchronizer
+
+HUMAN_COMFORT_FPS = 10.0   # paper: 10-30 FPS comfortable for street view
+
+
+def n_range(lam: float, mu: float) -> tuple[int, int]:
+    """Paper §III-B: n ∈ [⌈10/μ⌉, ⌈λ/μ⌉] when λ > 12 FPS (else the
+    conservative single bound ⌈λ/μ⌉)."""
+    hi = math.ceil(lam / mu)
+    if lam > 12.0:
+        lo = min(math.ceil(HUMAN_COMFORT_FPS / mu), hi)
+    else:
+        lo = hi
+    return lo, hi
+
+
+def choose_n(lam: float, mu: float,
+             mode: str = "near_real_time") -> int:
+    lo, hi = n_range(lam, mu)
+    return lo if mode == "near_real_time" else hi
+
+
+@dataclass
+class Report:
+    video: str
+    model: str
+    scheduler: str
+    n: int
+    sigma: float           # achieved detection processing FPS (σ_P)
+    map_score: float
+    drop_rate: float
+    drops_per_processed: float
+    offline: bool = False
+
+    def row(self):
+        return (f"{self.video},{self.model},{self.scheduler},{self.n},"
+                f"{self.sigma:.2f},{self.map_score*100:.1f},"
+                f"{self.drop_rate*100:.1f}")
+
+
+class ParallelDetector:
+    """The paper's EVA pipeline with calibrated device profiles.
+
+    ``model`` may be a single detector name or one per device — the
+    heterogeneous-models deployment the paper sketches as its third design
+    alternative (§III-A) and "ongoing work" (§V): e.g. YOLOv3 on the fast
+    CPU and SSD300 on the NCS2 sticks.  mAP is then scored per frame with
+    the noise profile of the model that actually processed it."""
+
+    def __init__(self, video: VideoSpec | str,
+                 model: str | Sequence[str] = "yolov3",
+                 devices: Sequence[str] = ("ncs2",),
+                 scheduler: str = "fcfs", interface: str = "usb3",
+                 host_overhead: float = 0.002, jitter: float = 0.0,
+                 seed: int = 0):
+        spec = BENCHMARK_VIDEOS[video] if isinstance(video, str) else video
+        self.spec = spec
+        self.video = SyntheticVideo(spec)
+        models = ([model] * len(devices) if isinstance(model, str)
+                  else list(model))
+        assert len(models) == len(devices), (models, devices)
+        self.model = models[0] if len(set(models)) == 1 else "mixed"
+        self.scheduler_kind = scheduler
+        self.executors = [
+            DetectorExecutor(DEVICE_PROFILES[d], MODEL_PROFILES[m],
+                             interface=interface, jitter=jitter,
+                             seed=seed + i)
+            for i, (d, m) in enumerate(zip(devices, models))]
+        self.scheduler = make_scheduler(scheduler, self.executors,
+                                        host_overhead=host_overhead)
+        self.sync = SequenceSynchronizer()
+        self.detector = ProxyDetector(models[0], spec.name, seed=seed)
+        self.detectors = [ProxyDetector(m, spec.name, seed=seed)
+                          for m in models]
+
+    def _fresh_scheduler(self):
+        for e in self.executors:
+            e.busy_until = 0.0
+            e.n_processed = 0
+            e.ewma_service = None
+        return make_scheduler(self.scheduler_kind, self.executors,
+                              host_overhead=self.scheduler.host_overhead)
+
+    def run(self, offline: bool = False, with_map: bool = True) -> Report:
+        """σ_P ("Detection FPS" in the paper's tables) is the saturated
+        processing capacity — the paper feeds the stored test video and
+        measures processing rate, so n=7 can exceed λ.  Drop rate and mAP
+        come from the λ-paced online run."""
+        if offline:
+            result = simulate(FrameStream(self.video), self.scheduler,
+                              offline=True)
+            synced = self.sync.order(result)
+            m = evaluate_map(self.video, synced, self.detector) if with_map \
+                else float("nan")
+            return Report(self.spec.name, self.model, self.scheduler_kind,
+                          len(self.executors), result.sigma, m,
+                          result.drop_rate, result.drops_per_processed,
+                          offline=True)
+        # capacity: the paper measures Detection FPS on the stored video,
+        # i.e. frames are always buffered and ready -> blocking dispatch
+        # through the scheduler's own policy
+        cap = simulate(FrameStream(self.video), self._fresh_scheduler(),
+                       offline=True)
+        paced = simulate(FrameStream(self.video), self._fresh_scheduler())
+        synced = self.sync.order(paced)
+        det_by_frame = {a.frame_idx: self.detectors[a.executor_idx]
+                        for a in paced.assignments}
+        m = evaluate_map(self.video, synced, self.detector,
+                         det_by_frame=det_by_frame) if with_map \
+            else float("nan")
+        return Report(self.spec.name, self.model, self.scheduler_kind,
+                      len(self.executors), cap.sigma, m,
+                      paced.drop_rate, paced.drops_per_processed)

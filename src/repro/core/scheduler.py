@@ -1,0 +1,218 @@
+"""Parallel detection scheduling algorithms (paper §III-C).
+
+All schedulers operate on a deterministic virtual clock (the simulator in
+``simulator.py`` drives them with arrival events).  Semantics calibrated to
+the paper's measurements:
+
+* LockstepRR — the paper's Round-Robin: the thread pool dispatches one
+  frame per model per round and joins the round before starting the next
+  (this is what makes heterogeneous RR degrade to n x min(mu): Table VII
+  shows 8 x 0.4 ≈ 3.4 FPS for slow-CPU + 7 NCS2).  Frames arriving while
+  all round slots are taken are dropped.
+* WeightedRR — static weights ∝ configured device rates (compile-time).
+* FCFS — work-conserving: a frame goes to the first available executor
+  (each executor holds at most one queued frame, i.e. the frame currently
+  being transferred); throughput approaches Σ mu_i (Table VII: 29 FPS for
+  fast-CPU + 7 NCS2 vs 20.1 for RR).
+* Proportional — performance-aware: WeightedRR whose weights are
+  re-derived every ``update_period`` rounds from EWMA-measured service
+  times (handles runtime drift the static WRR cannot).
+
+A host-dispatch serialization term models the paper's Table X language
+study: Python's GIL serializes pre/post-processing (h ≈ 102 ms/frame caps
+the pipeline at ~9.8 FPS no matter how many sticks); the C++ thread pool
+has h ≈ 2 ms and scales.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+from .executor import DetectorExecutor
+
+
+@dataclass
+class Assignment:
+    frame_idx: int
+    executor_idx: int
+    t_start: float
+    t_done: float
+
+
+class _Base:
+    def __init__(self, executors: List[DetectorExecutor],
+                 host_overhead: float = 0.001, sync_overhead: float = 0.005):
+        self.executors = executors
+        self.host_overhead = host_overhead
+        self.sync_overhead = sync_overhead
+        self.host_free_at = 0.0
+
+    @property
+    def n(self):
+        return len(self.executors)
+
+    def _dispatch(self, ex: DetectorExecutor, frame_idx: int,
+                  t: float) -> Assignment:
+        # host dispatch is serialized (GIL / thread-pool handoff)
+        t = max(t, self.host_free_at)
+        self.host_free_at = t + self.host_overhead
+        service = ex.service_time() * (1 + self.sync_overhead)
+        t_start = max(t, ex.busy_until)
+        t_done = t_start + service
+        ex.busy_until = t_done
+        ex.record(service)
+        return Assignment(frame_idx, self.executors.index(ex), t_start,
+                          t_done)
+
+    def assign(self, frame_idx: int, t: float) -> Optional[Assignment]:
+        raise NotImplementedError
+
+    def blocking_assign(self, frame_idx: int, t: float = 0.0) -> Assignment:
+        """Zero-drop dispatch: the frame waits (buffered) until this
+        scheduler's policy can take it (no earlier than arrival ``t``).
+        FCFS default: first executor to free up."""
+        ex = min(self.executors, key=lambda e: e.busy_until)
+        return self._dispatch(ex, frame_idx, max(ex.busy_until, t))
+
+
+class FCFSScheduler(_Base):
+    """First-come-first-serve: first available executor; one in-flight +
+    one queued frame per executor; drop if every slot is full."""
+
+    def assign(self, frame_idx, t):
+        # first available executor; while all are busy, any executor with a
+        # free single queued-frame slot (the frame being transferred while
+        # the previous one computes) keeps the pipeline work-conserving
+        free = [e for e in self.executors if e.busy_until <= t]
+        if free:
+            return self._dispatch(min(free, key=lambda e: e.busy_until),
+                                  frame_idx, t)
+        open_q = [e for e in self.executors
+                  if e.busy_until - t <= 1.0 / e.mu_effective]
+        if open_q:
+            return self._dispatch(min(open_q, key=lambda e: e.busy_until),
+                                  frame_idx, t)
+        return None
+
+
+class LockstepRRScheduler(_Base):
+    """Paper's RR: strict order, one frame per model per round, round
+    barrier = all models done."""
+
+    def __init__(self, executors, **kw):
+        super().__init__(executors, **kw)
+        self.rr_idx = 0
+        self.round_barrier = 0.0
+
+    def assign(self, frame_idx, t):
+        ex = self.executors[self.rr_idx]
+        # the frame for this slot must wait for the round barrier
+        t_eff = max(t, self.round_barrier)
+        if ex.busy_until > t:
+            return None                      # slot still busy -> drop
+        a = self._dispatch(ex, frame_idx, t_eff)
+        self.rr_idx = (self.rr_idx + 1) % self.n
+        if self.rr_idx == 0:                 # round complete: set barrier
+            self.round_barrier = max(e.busy_until for e in self.executors)
+        return a
+
+    def blocking_assign(self, frame_idx, t: float = 0.0):
+        ex = self.executors[self.rr_idx]
+        a = self._dispatch(ex, frame_idx, max(self.round_barrier,
+                                              ex.busy_until, t))
+        self.rr_idx = (self.rr_idx + 1) % self.n
+        if self.rr_idx == 0:
+            self.round_barrier = max(e.busy_until for e in self.executors)
+        return a
+
+
+class WeightedRRScheduler(_Base):
+    """Static weighted RR: executor j takes w_j consecutive slots per
+    round, w ∝ configured device rate."""
+
+    def __init__(self, executors, weights=None, **kw):
+        super().__init__(executors, **kw)
+        self.weights = weights or self._default_weights()
+        self._slots = self._expand()
+        self.slot_idx = 0
+        self.round_barrier = 0.0
+
+    def _default_weights(self):
+        mus = np.array([e.mu_effective for e in self.executors])
+        return np.maximum(1, np.round(mus / mus.min())).astype(int).tolist()
+
+    def _expand(self):
+        # smooth (interleaved) weighted round-robin: spreading each
+        # executor's slots avoids head-of-line blocking in the strict-order
+        # dispatcher (a run of consecutive slots on a busy device would
+        # stall dispatch for every executor behind it)
+        slots = []
+        for j, w in enumerate(self.weights):
+            slots += [((k + 0.5) / int(w), j) for k in range(int(w))]
+        return [j for _, j in sorted(slots)]
+
+    def assign(self, frame_idx, t):
+        ex = self.executors[self._slots[self.slot_idx]]
+        t_eff = max(t, self.round_barrier)
+        if ex.busy_until > t + 1.0 / ex.mu_effective:
+            return None                      # slot backlog -> drop
+        a = self._dispatch(ex, frame_idx, t_eff)
+        self.slot_idx = (self.slot_idx + 1) % len(self._slots)
+        if self.slot_idx == 0:
+            self.round_barrier = max(e.busy_until for e in self.executors)
+        return a
+
+    def blocking_assign(self, frame_idx, t: float = 0.0):
+        ex = self.executors[self._slots[self.slot_idx]]
+        a = self._dispatch(ex, frame_idx, max(self.round_barrier,
+                                              ex.busy_until, t))
+        self.slot_idx = (self.slot_idx + 1) % len(self._slots)
+        if self.slot_idx == 0:
+            self.round_barrier = max(e.busy_until for e in self.executors)
+        return a
+
+
+class ProportionalScheduler(WeightedRRScheduler):
+    """Performance-aware proportional: re-derive weights from measured EWMA
+    service times every ``update_period`` completed rounds."""
+
+    def __init__(self, executors, update_period: int = 4, **kw):
+        super().__init__(executors, weights=[1] * len(executors), **kw)
+        self.update_period = update_period
+        self._rounds = 0
+
+    def assign(self, frame_idx, t):
+        a = super().assign(frame_idx, t)
+        if self.slot_idx == 0 and a is not None:
+            self._rounds += 1
+            if self._rounds % self.update_period == 0:
+                self._refresh_weights()
+        return a
+
+    def blocking_assign(self, frame_idx, t: float = 0.0):
+        a = super().blocking_assign(frame_idx, t)
+        if self.slot_idx == 0:
+            self._rounds += 1
+            if self._rounds % self.update_period == 0:
+                self._refresh_weights()
+        return a
+
+    def _refresh_weights(self):
+        ts = np.array([e.ewma_service if e.ewma_service else
+                       1.0 / e.mu_effective for e in self.executors])
+        rates = 1.0 / ts
+        self.weights = np.maximum(1, np.round(rates / rates.min())) \
+            .astype(int).tolist()
+        self._slots = self._expand()
+        self.slot_idx = 0
+
+
+def make_scheduler(kind: str, executors, **kw):
+    return {
+        "rr": LockstepRRScheduler,
+        "wrr": WeightedRRScheduler,
+        "fcfs": FCFSScheduler,
+        "proportional": ProportionalScheduler,
+    }[kind](executors, **kw)

@@ -1,0 +1,5 @@
+from .pipeline import (LMBatchIterator, make_lm_batches, make_modality_batch,
+                       synthetic_corpus)
+
+__all__ = ["LMBatchIterator", "make_lm_batches", "make_modality_batch",
+           "synthetic_corpus"]

@@ -1,0 +1,5 @@
+from .ssd import (SSDConfig, decode_detections, detector_loss, init_ssd,
+                  make_anchors, ssd_forward)
+
+__all__ = ["SSDConfig", "decode_detections", "detector_loss", "init_ssd",
+           "make_anchors", "ssd_forward"]

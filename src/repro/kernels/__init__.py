@@ -1,0 +1,7 @@
+from . import ops, ref
+from .decode_attention import decode_attention
+from .flash_attention import flash_attention
+from .iou import iou_matrix
+
+__all__ = ["ops", "ref", "decode_attention", "flash_attention",
+           "iou_matrix"]

@@ -1,0 +1,63 @@
+"""Jit'd dispatch layer over the Pallas kernels.
+
+On the CPU host the kernels execute in interpret mode (the kernel body
+runs as traced JAX ops — numerics identical to TPU); on a TPU backend the
+same pallas_call compiles to Mosaic.  ``use_pallas=False`` falls back to
+the pure-jnp oracles in ref.py (the default inside model code, where XLA
+fusion already does well; benchmarks compare both paths).
+"""
+from __future__ import annotations
+
+import jax
+
+from . import ref
+from .decode_attention import decode_attention as _decode_pallas
+from .flash_attention import flash_attention as _flash_pallas
+from .iou import iou_matrix as _iou_pallas
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def flash_attention(q, k, v, *, causal=True, scale=None, use_pallas=True):
+    if not use_pallas:
+        return ref.flash_attention_ref(q, k, v, causal=causal, scale=scale)
+    return _flash_pallas(q, k, v, causal=causal, scale=scale,
+                         interpret=_interpret())
+
+
+def decode_attention(q, k, v, *, scale=None, use_pallas=True):
+    if not use_pallas:
+        return ref.decode_attention_ref(q, k, v, scale=scale)
+    return _decode_pallas(q, k, v, scale=scale, interpret=_interpret())
+
+
+def iou_matrix(a, b, *, use_pallas=True):
+    if not use_pallas:
+        return ref.iou_matrix_ref(a, b)
+    return _iou_pallas(a, b, interpret=_interpret())
+
+
+def nms(boxes, scores, iou_thr=0.5, max_out=64, use_pallas=True):
+    """Greedy NMS: IoU matrix from the Pallas kernel + sequential suppress
+    loop (inherently serial; stays in jnp)."""
+    import jax.numpy as jnp
+    iou = iou_matrix(boxes, boxes, use_pallas=use_pallas)
+    order = jnp.argsort(-scores)
+
+    def body(i, state):
+        keep, kcount, alive = state
+        idx = order[i]
+        ok = alive[idx]
+        keep = keep.at[kcount].set(jnp.where(ok, idx, keep[kcount]))
+        kcount = kcount + ok.astype(jnp.int32)
+        alive = alive & ~((iou[idx] >= iou_thr) & ok)
+        return keep, kcount, alive
+
+    keep0 = jnp.zeros((max_out,), jnp.int32)
+    alive0 = jnp.ones((boxes.shape[0],), bool)
+    keep, kcount, _ = jax.lax.fori_loop(0, boxes.shape[0], body,
+                                        (keep0, 0, alive0))
+    valid = jnp.arange(max_out) < kcount
+    return keep, valid

@@ -1,0 +1,84 @@
+"""Pure-jnp oracles for every Pallas kernel in this package."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True,
+                        scale: float | None = None):
+    """q:(B,H,T,D) k/v:(B,H,S,D) -> (B,H,T,D)  (full softmax attention)."""
+    B, H, T, D = q.shape
+    S = k.shape[2]
+    scale = D ** -0.5 if scale is None else scale
+    s = jnp.einsum("bhtd,bhsd->bhts", q, k).astype(jnp.float32) * scale
+    if causal:
+        mask = jnp.arange(S)[None, :] <= jnp.arange(T)[:, None] + (S - T)
+        s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhts,bhsd->bhtd", p.astype(q.dtype), v)
+
+
+def decode_attention_ref(q, k, v, *, scale: float | None = None):
+    """GQA flash-decode oracle.
+    q:(B,H,D) one token; k/v:(B,S,KV,D) full cache -> (B,H,D)."""
+    B, H, D = q.shape
+    S, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, KV, G, D)
+    scale = D ** -0.5 if scale is None else scale
+    s = jnp.einsum("bkgd,bskd->bkgs", qg, k).astype(jnp.float32) * scale
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", p.astype(q.dtype), v)
+    return out.reshape(B, H, D)
+
+
+def iou_matrix_ref(a, b):
+    """a:(N,4) b:(M,4) xyxy -> (N,M) IoU in f32."""
+    a = a.astype(jnp.float32)
+    b = b.astype(jnp.float32)
+    tl = jnp.maximum(a[:, None, :2], b[None, :, :2])
+    br = jnp.minimum(a[:, None, 2:], b[None, :, 2:])
+    inter = jnp.prod(jnp.clip(br - tl, 0.0), -1)
+    area_a = jnp.prod(a[:, 2:] - a[:, :2], -1)
+    area_b = jnp.prod(b[:, 2:] - b[:, :2], -1)
+    union = area_a[:, None] + area_b[None, :] - inter
+    return inter / jnp.maximum(union, 1e-9)
+
+
+def nms_ref(boxes, scores, iou_thr: float = 0.5, max_out: int = 64):
+    """Greedy NMS oracle. Returns (keep_idx (max_out,), valid mask)."""
+    n = boxes.shape[0]
+    iou = iou_matrix_ref(boxes, boxes)
+    order = jnp.argsort(-scores)
+
+    def body(i, state):
+        keep, kcount, alive = state
+        idx = order[i]
+        ok = alive[idx]
+        keep = keep.at[kcount].set(jnp.where(ok, idx, keep[kcount]))
+        kcount = kcount + ok.astype(jnp.int32)
+        # suppress everything overlapping idx
+        sup = (iou[idx] >= iou_thr) & ok
+        alive = alive & ~sup
+        return keep, kcount, alive
+
+    keep0 = jnp.zeros((max_out,), jnp.int32)
+    alive0 = jnp.ones((n,), bool)
+    keep, kcount, _ = jax.lax.fori_loop(0, n, body, (keep0, 0, alive0))
+    valid = jnp.arange(max_out) < kcount
+    return keep, valid
+
+
+def rwkv_scan_ref(r, k, v, w, u, s0):
+    """Stepwise oracle for the RWKV-6 recurrence kernel.
+    r/k/v/w: (B,H,T,hs); u: (H,hs); s0: (B,H,hs,hs)."""
+    def step(S, inp):
+        r_t, k_t, v_t, w_t = inp                       # (B,H,hs)
+        kv = k_t[..., :, None] * v_t[..., None, :]
+        out = jnp.einsum("bhk,bhkv->bhv", r_t, S + u[None, :, :, None] * kv)
+        S = w_t[..., :, None] * S + kv
+        return S, out
+    xs = tuple(a.transpose(2, 0, 1, 3) for a in (r, k, v, w))
+    S, outs = jax.lax.scan(step, s0.astype(jnp.float32), xs)
+    return outs.transpose(1, 2, 0, 3).astype(r.dtype), S

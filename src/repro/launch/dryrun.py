@@ -1,0 +1,187 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# (the two lines above MUST run before any other import — jax locks the
+# device count at first init)
+import argparse            # noqa: E402
+import json                # noqa: E402
+import re                  # noqa: E402
+import time                # noqa: E402
+import traceback           # noqa: E402
+from pathlib import Path   # noqa: E402
+
+import jax                 # noqa: E402
+import jax.numpy as jnp    # noqa: E402
+
+from repro.configs import ARCH_IDS, SHAPES, get_config, supported_shapes  # noqa: E402
+from repro.launch.mesh import make_production_mesh                        # noqa: E402
+from repro.models import init_model                                       # noqa: E402
+from repro.optim import AdamWConfig, adamw_init, make_schedule            # noqa: E402
+from repro.runtime import input_specs, make_decode_step, make_prefill_step, make_train_step  # noqa: E402
+from repro.sharding import input_shardings, mesh_context, param_shardings  # noqa: E402
+from repro.hlo import collective_bytes_from_hlo, hlo_cost_from_text       # noqa: E402
+
+OUT_DIR = Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
+
+# long_500k needs sub-quadratic attention: SSM/hybrid run natively; the
+# full-attention archs run the sliding-window variant (DESIGN.md).
+NATIVE_LONG = {"rwkv6-3b", "jamba-v0.1-52b"}
+
+
+def variant_for(arch: str, shape: str):
+    if shape == "long_500k" and arch not in NATIVE_LONG:
+        return "swa"
+    return None
+
+
+def opt_config(n_params: int) -> AdamWConfig:
+    # >50B params: bf16 moments so FSDP-sharded AdamW fits 16GB/chip HBM
+    moment = "bfloat16" if n_params > 5e10 else "float32"
+    return AdamWConfig(moment_dtype=moment)
+
+
+def count_params(params_struct) -> int:
+    import math
+    return sum(math.prod(l.shape) for l in jax.tree.leaves(params_struct))
+
+
+def build_lowered(arch: str, shape_name: str, mesh):
+    """Lower one (arch x shape) pair on `mesh`. Returns (lowered, meta)."""
+    variant = variant_for(arch, shape_name)
+    cfg = get_config(arch, "full", variant)
+    if shape_name not in supported_shapes(cfg, variant):
+        return None, {"skipped": True,
+                      "reason": ("encoder-only: no decode step"
+                                 if cfg.encoder_only else
+                                 "full attention at 524k: needs swa variant")}
+    shape = SHAPES[shape_name]
+    specs = input_specs(cfg, shape)
+    rng_struct = jax.ShapeDtypeStruct((2,), jnp.uint32)
+    params_struct = jax.eval_shape(lambda k: init_model(cfg, k), rng_struct)
+    n_params = count_params(params_struct)
+
+    with mesh_context(mesh):
+        if shape.kind == "train":
+            ocfg = opt_config(n_params)
+            sched = make_schedule("wsd" if arch == "minicpm-2b" else "cosine",
+                                  3e-4, 10000)
+            step = make_train_step(cfg, ocfg, sched, remat=True)
+            state_struct = {
+                "params": params_struct,
+                "opt": jax.eval_shape(lambda p: adamw_init(p, ocfg),
+                                      params_struct),
+            }
+            state_sh = param_shardings(state_struct, mesh)
+            batch_sh = input_shardings(specs, mesh)
+            jitted = jax.jit(step, in_shardings=(state_sh, batch_sh),
+                             out_shardings=(state_sh, None),
+                             donate_argnums=(0,))
+            lowered = jitted.lower(state_struct, specs)
+        elif shape.kind == "prefill":
+            step = make_prefill_step(cfg)
+            p_sh = param_shardings(params_struct, mesh)
+            b_sh = input_shardings(specs, mesh)
+            out_struct = jax.eval_shape(step, params_struct, specs)
+            cache_sh = input_shardings(out_struct[1], mesh)
+            jitted = jax.jit(step, in_shardings=(p_sh, b_sh),
+                             out_shardings=(None, cache_sh))
+            lowered = jitted.lower(params_struct, specs)
+        else:
+            step = make_decode_step(cfg)
+            p_sh = param_shardings(params_struct, mesh)
+            b_sh = input_shardings(specs, mesh)
+            # out cache sharding == in cache sharding => donation aliases the
+            # ring buffer in place (no 2x cache copy)
+            jitted = jax.jit(step, in_shardings=(p_sh, b_sh),
+                             out_shardings=(None, b_sh["cache"]),
+                             donate_argnums=(1,))
+            lowered = jitted.lower(params_struct, specs)
+
+    meta = {"arch": arch, "shape": shape_name, "variant": variant,
+            "n_params": n_params, "kind": shape.kind,
+            "mesh": dict(zip(mesh.axis_names,
+                             [int(s) for s in mesh.devices.shape]))}
+    return lowered, meta
+
+
+def run_pair(arch: str, shape_name: str, multi_pod: bool, save=True):
+    mesh_name = "multi" if multi_pod else "single"
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    result = {"arch": arch, "shape": shape_name, "mesh": mesh_name}
+    try:
+        lowered, meta = build_lowered(arch, shape_name, mesh)
+        if lowered is None:
+            result.update(meta)
+            print(f"[dryrun] SKIP {arch} x {shape_name} ({meta['reason']})")
+        else:
+            result.update(meta)
+            t_lower = time.time()
+            compiled = lowered.compile()
+            t_compile = time.time()
+            mem = compiled.memory_analysis()
+            cost = compiled.cost_analysis()
+            result["memory"] = {
+                k: int(getattr(mem, k)) for k in
+                ("argument_size_in_bytes", "output_size_in_bytes",
+                 "temp_size_in_bytes", "generated_code_size_in_bytes")
+                if hasattr(mem, k)}
+            result["cost"] = {k: float(v) for k, v in cost.items()
+                              if isinstance(v, (int, float))}
+            hlo_text = compiled.as_text()
+            result["collectives"] = collective_bytes_from_hlo(hlo_text)
+            result["hlo_cost"] = hlo_cost_from_text(hlo_text)
+            result["timing"] = {"lower_s": t_lower - t0,
+                                "compile_s": t_compile - t_lower}
+            print(f"[dryrun] OK   {arch} x {shape_name} x {mesh_name} "
+                  f"(lower {t_lower-t0:.1f}s compile {t_compile-t_lower:.1f}s"
+                  f", {result['n_params']/1e9:.1f}B params)")
+            print(f"         memory: {result['memory']}")
+            flops = result['cost'].get('flops', 0.0)
+            print(f"         flops={flops:.3e} "
+                  f"coll_bytes={result['collectives']['total_bytes']:.3e}")
+    except Exception as e:  # noqa: BLE001 — record the failure, keep going
+        result["error"] = f"{type(e).__name__}: {e}"
+        result["traceback"] = traceback.format_exc()[-4000:]
+        print(f"[dryrun] FAIL {arch} x {shape_name} x {mesh_name}: "
+              f"{result['error']}")
+    if save:
+        OUT_DIR.mkdir(parents=True, exist_ok=True)
+        out = OUT_DIR / f"{arch}__{shape_name}__{mesh_name}.json"
+        out.write_text(json.dumps(result, indent=1))
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all",
+                    help="architecture id or 'all'")
+    ap.add_argument("--shape", default="all", help="input shape or 'all'")
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    archs = ARCH_IDS if args.arch == "all" else [args.arch]
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    n_fail = 0
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                mesh_name = "multi" if mp else "single"
+                out = OUT_DIR / f"{arch}__{shape}__{mesh_name}.json"
+                if args.skip_existing and out.exists():
+                    prev = json.loads(out.read_text())
+                    if "error" not in prev:
+                        continue
+                res = run_pair(arch, shape, mp)
+                n_fail += 1 if "error" in res else 0
+    print(f"[dryrun] done, {n_fail} failures")
+    raise SystemExit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,29 @@
+"""Production mesh definitions (TPU v5e-class pods).
+
+Functions, not module-level constants, so importing this module never
+touches jax device state (the dry-run must set XLA_FLAGS before first
+jax init)."""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips per pod; 2 pods = 512 chips multi-pod."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_replica_mesh(n_replicas: int, chips_per_replica: int = 1):
+    """Paper-mode mesh: n parallel detection-model replicas over the
+    ``replica`` axis (the paper's n NCS2 sticks), each replica spanning
+    ``chips_per_replica`` model-parallel chips."""
+    return jax.make_mesh((n_replicas, chips_per_replica),
+                         ("data", "model"))
+
+
+def make_host_mesh():
+    """Single-host CPU mesh for smoke runs."""
+    n = len(jax.devices())
+    return jax.make_mesh((n, 1), ("data", "model"))

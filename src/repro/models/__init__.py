@@ -1,0 +1,9 @@
+from .config import (LayerSpec, MLAConfig, MambaConfig, ModelConfig,
+                     MoEConfig, RWKVConfig, Stage, dense_stages)
+from .transformer import (init_cache, init_model, model_apply)
+
+__all__ = [
+    "LayerSpec", "MLAConfig", "MambaConfig", "ModelConfig", "MoEConfig",
+    "RWKVConfig", "Stage", "dense_stages", "init_cache", "init_model",
+    "model_apply",
+]

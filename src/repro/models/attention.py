@@ -1,0 +1,348 @@
+"""Attention mixers: GQA (full / sliding-window), optional qk-norm, and
+DeepSeek-style MLA (multi-head latent attention with compressed KV cache).
+
+Three execution modes share one code path:
+  train   — full sequence, no cache
+  prefill — full sequence, returns a populated KV cache
+  decode  — single new token against an existing cache
+
+Caches are position-indexed ring buffers of length ``cache_len`` (= the
+sliding window for SWA variants, else the max sequence length), so the
+long_500k SWA configs keep O(window) state.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import layers
+from .config import ModelConfig, LayerSpec, MLAConfig
+from .rope import apply_rope
+
+NEG_INF = -1e30
+
+
+# --------------------------------------------------------------------- core
+Q_CHUNK, K_CHUNK = 512, 1024
+
+
+def sdpa(q, k, v, mask, scale):
+    """q:(B,T,H,D) k/v:(B,S,KV,D) mask:(B,1,T,S) bool -> (B,T,H,D).
+
+    Pure-jnp scaled-dot-product attention (reference path; also the oracle
+    the Pallas flash kernels in ``repro.kernels`` are validated against).
+    """
+    B, T, H, D = q.shape
+    KV = k.shape[2]
+    if KV != H:
+        # grouped GQA: never materialize the repeated K/V (a 4x cache-read
+        # saving on kv=8 decode; §Perf hillclimb #3)
+        G = H // KV
+        qg = q.reshape(B, T, KV, G, D)
+        s = jnp.einsum("btkgd,bskd->bkgts", qg, k).astype(jnp.float32)
+        s = jnp.where(mask[:, None], s * scale, NEG_INF)
+        p = jax.nn.softmax(s, axis=-1).astype(q.dtype)
+        out = jnp.einsum("bkgts,bskd->btkgd", p, v)
+        return out.reshape(B, T, H, D)
+    scores = jnp.einsum("bthd,bshd->bhts", q, k).astype(jnp.float32) * scale
+    scores = jnp.where(mask, scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhts,bshd->bthd", probs, v)
+
+
+def sdpa_masked(q, k, v, q_pos, k_pos, causal, window, k_valid, scale):
+    """Dispatch: chunked online-softmax (flash-style; O(chunk^2) temp
+    memory instead of O(T*S)) for long sequences, naive reference for short
+    sequences and decode.  Masks are built per chunk from positions, never
+    materialized at (T, S)."""
+    T, S = q.shape[1], k.shape[1]
+    if (T >= 2 * Q_CHUNK and S >= 2 * K_CHUNK and T % Q_CHUNK == 0
+            and S % K_CHUNK == 0 and k_valid is None):
+        return _sdpa_chunked(q, k, v, q_pos, k_pos, causal, window, scale)
+    mask = make_mask(q_pos, k_pos, causal, window, k_valid)
+    return sdpa(q, k, v, mask, scale)
+
+
+def _sdpa_chunked(q, k, v, q_pos, k_pos, causal, window, scale):
+    B, T, H, D = q.shape
+    S, KV = k.shape[1], k.shape[2]
+    Dv = v.shape[-1]                 # MLA: v head dim != qk head dim
+    G = H // KV                      # grouped GQA: K/V never repeated
+    nq, nk = T // Q_CHUNK, S // K_CHUNK
+
+    q_c = q.reshape(B, nq, Q_CHUNK, KV, G, D).transpose(1, 0, 2, 3, 4, 5)
+    qp_c = q_pos.reshape(B, nq, Q_CHUNK).transpose(1, 0, 2)
+    k_c = k.reshape(B, nk, K_CHUNK, KV, D).transpose(1, 0, 2, 3, 4)
+    v_c = v.reshape(B, nk, K_CHUNK, KV, Dv).transpose(1, 0, 2, 3, 4)
+    kp_c = k_pos.reshape(B, nk, K_CHUNK).transpose(1, 0, 2)
+
+    def q_block(_, inp):
+        qb, qpb = inp                            # (B,Tq,KV,G,D), (B,Tq)
+
+        @jax.checkpoint  # recompute score chunks in backward: O(chunk^2)
+        def kv_step(carry, kv_in):
+            m, l, acc = carry
+            kb, vb, kpb = kv_in
+            s = jnp.einsum("btkgd,bskd->bkgts", qb, kb).astype(jnp.float32)
+            s = s * scale
+            msk = make_mask(qpb, kpb, causal, window)  # (B,1,Tq,Tk)
+            s = jnp.where(msk[:, None], s, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l = l * corr + jnp.sum(p, axis=-1)
+            acc = acc * corr[..., None] + jnp.einsum(
+                "bkgts,bskd->bkgtd", p, vb.astype(jnp.float32))
+            return (m_new, l, acc), None
+
+        m0 = jnp.full((B, KV, G, Q_CHUNK), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, KV, G, Q_CHUNK), jnp.float32)
+        a0 = jnp.zeros((B, KV, G, Q_CHUNK, Dv), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0),
+                                      (k_c, v_c, kp_c))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        # (B,KV,G,Tq,Dv) -> (B,Tq,KV,G,Dv)
+        return None, out.transpose(0, 3, 1, 2, 4).astype(q.dtype)
+
+    _, outs = jax.lax.scan(q_block, None, (q_c, qp_c))
+    return outs.transpose(1, 0, 2, 3, 4, 5).reshape(B, T, H, Dv)
+
+
+def make_mask(q_pos, k_pos, causal, window, k_valid=None):
+    """q_pos:(B,T) k_pos:(B,S) -> bool (B,1,T,S)."""
+    q = q_pos[:, None, :, None]
+    k = k_pos[:, None, None, :]
+    m = jnp.ones(jnp.broadcast_shapes(q.shape, k.shape), bool)
+    if causal:
+        m &= k <= q
+    if window is not None:
+        m &= (q - k) < window
+    if k_valid is not None:
+        m &= k_valid[:, None, None, :]
+    return m
+
+
+# ------------------------------------------------------------------ GQA
+def init_gqa(key, cfg: ModelConfig):
+    H, KV, D, dm = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim, cfg.d_model
+    ks = jax.random.split(key, 4)
+    dt = jnp.dtype(cfg.param_dtype)
+    p = {
+        "wq": layers.dense_init(ks[0], dm, H * D, dt),
+        "wk": layers.dense_init(ks[1], dm, KV * D, dt),
+        "wv": layers.dense_init(ks[2], dm, KV * D, dt),
+        "wo": layers.dense_init(ks[3], H * D, dm, dt),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = layers.init_rms_norm(D, dt)
+        p["k_norm"] = layers.init_rms_norm(D, dt)
+    return p
+
+
+def init_gqa_cache(cfg: ModelConfig, spec: LayerSpec, batch, cache_len, dtype):
+    KV, D = cfg.n_kv_heads, cfg.head_dim
+    win = spec.window or cfg.decode_window
+    L = min(cache_len, win) if win else cache_len
+    return {
+        "k": jnp.zeros((batch, L, KV, D), dtype),
+        "v": jnp.zeros((batch, L, KV, D), dtype),
+    }
+
+
+def _ring_positions(cache_len, next_pos):
+    """Positions stored at each ring slot after ``next_pos`` tokens have been
+    written (token i lives at slot i % cache_len).  Slot s holds the largest
+    position p < next_pos with p ≡ s (mod cache_len)."""
+    slots = jnp.arange(cache_len, dtype=jnp.int32)
+    last = next_pos - 1
+    k_pos = last - jnp.mod(last - slots, cache_len)
+    valid = k_pos >= 0
+    return k_pos.astype(jnp.int32), valid
+
+
+def apply_gqa(p, cfg: ModelConfig, spec: LayerSpec, x, positions,
+              mode="train", cache=None, decode_pos=None):
+    B, T, _ = x.shape
+    H, KV, D = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = (x @ p["wq"]).reshape(B, T, H, D)
+    k = (x @ p["wk"]).reshape(B, T, KV, D)
+    v = (x @ p["wv"]).reshape(B, T, KV, D)
+    if cfg.qk_norm:
+        q = layers.rms_norm(q, p["q_norm"]["scale"], cfg.norm_eps)
+        k = layers.rms_norm(k, p["k_norm"]["scale"], cfg.norm_eps)
+    q = apply_rope(q, positions, cfg.rope_theta, cfg.rope)
+    k = apply_rope(k, positions, cfg.rope_theta, cfg.rope)
+    scale = D ** -0.5
+    window = spec.window or (cfg.decode_window if mode != "train" else spec.window)
+
+    new_cache = None
+    if mode in ("train", "prefill"):
+        out = sdpa_masked(q, k, v, positions, positions, cfg.causal,
+                          window, None, scale)
+        if mode == "prefill":
+            new_cache = _fill_cache(cache, k, v, T)
+    else:  # decode: T == 1, append at decode_pos then attend over the ring
+        L = cache["k"].shape[1]
+        slot = jnp.mod(decode_pos, L)
+        ck = jax.lax.dynamic_update_slice(cache["k"], k, (0, slot, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cache["v"], v, (0, slot, 0, 0))
+        new_cache = {"k": ck, "v": cv}
+        k_pos, valid = _ring_positions(L, decode_pos + 1)
+        k_pos = jnp.broadcast_to(k_pos[None], (B, L))
+        valid = jnp.broadcast_to(valid[None], (B, L))
+        out = sdpa_masked(q, ck, cv, positions, k_pos, cfg.causal, window,
+                          valid, scale)
+
+    y = out.reshape(B, T, H * D) @ p["wo"]
+    return y, new_cache
+
+
+def _fill_cache(cache, k, v, T):
+    """Write the last ``cache_len`` of the prefill K/V into the ring so that
+    token i sits at slot i %% cache_len (matching decode's ring indexing)."""
+    L = cache["k"].shape[1]
+    if T <= L:
+        ck = jax.lax.dynamic_update_slice(cache["k"], k, (0, 0, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cache["v"], v, (0, 0, 0, 0))
+        return {"k": ck, "v": cv}
+    # keep the trailing window, placed at its ring slots
+    tail_k, tail_v = k[:, T - L:], v[:, T - L:]
+    shift = jnp.mod(T - L, L)
+    ck = jnp.roll(tail_k, shift, axis=1)
+    cv = jnp.roll(tail_v, shift, axis=1)
+    return {"k": ck, "v": cv}
+
+
+# ------------------------------------------------------------------ MLA
+def init_mla(key, cfg: ModelConfig):
+    m: MLAConfig = cfg.mla
+    H, dm = cfg.n_heads, cfg.d_model
+    ks = jax.random.split(key, 6)
+    dt = jnp.dtype(cfg.param_dtype)
+    qk_dim = m.qk_nope_dim + m.qk_rope_dim
+    return {
+        "wq_a": layers.dense_init(ks[0], dm, m.q_lora_rank, dt),
+        "q_norm": layers.init_rms_norm(m.q_lora_rank, dt),
+        "wq_b": layers.dense_init(ks[1], m.q_lora_rank, H * qk_dim, dt),
+        "wkv_a": layers.dense_init(ks[2], dm, m.kv_lora_rank + m.qk_rope_dim, dt),
+        "kv_norm": layers.init_rms_norm(m.kv_lora_rank, dt),
+        "wk_b": layers.dense_init(ks[3], m.kv_lora_rank, H * m.qk_nope_dim, dt),
+        "wv_b": layers.dense_init(ks[4], m.kv_lora_rank, H * m.v_head_dim, dt),
+        "wo": layers.dense_init(ks[5], H * m.v_head_dim, dm, dt),
+    }
+
+
+def init_mla_cache(cfg: ModelConfig, spec: LayerSpec, batch, cache_len, dtype):
+    m = cfg.mla
+    win = spec.window or cfg.decode_window
+    L = min(cache_len, win) if win else cache_len
+    return {
+        "ckv": jnp.zeros((batch, L, m.kv_lora_rank), dtype),
+        "kpe": jnp.zeros((batch, L, m.qk_rope_dim), dtype),
+    }
+
+
+def _mla_expand(p, cfg, ckv):
+    """ckv:(B,S,r) -> k_nope:(B,S,H,nope), v:(B,S,H,v_dim)."""
+    m, H = cfg.mla, cfg.n_heads
+    B, S, _ = ckv.shape
+    k_nope = (ckv @ p["wk_b"]).reshape(B, S, H, m.qk_nope_dim)
+    v = (ckv @ p["wv_b"]).reshape(B, S, H, m.v_head_dim)
+    return k_nope, v
+
+
+def apply_mla(p, cfg: ModelConfig, spec: LayerSpec, x, positions,
+              mode="train", cache=None, decode_pos=None):
+    m, H = cfg.mla, cfg.n_heads
+    B, T, _ = x.shape
+    qk_dim = m.qk_nope_dim + m.qk_rope_dim
+
+    q_lat = layers.rms_norm(x @ p["wq_a"], p["q_norm"]["scale"], cfg.norm_eps)
+    q = (q_lat @ p["wq_b"]).reshape(B, T, H, qk_dim)
+    q_nope, q_pe = q[..., :m.qk_nope_dim], q[..., m.qk_nope_dim:]
+    q_pe = apply_rope(q_pe, positions, cfg.rope_theta, "full")
+    q = jnp.concatenate([q_nope, q_pe], axis=-1)
+
+    kv = x @ p["wkv_a"]
+    ckv = layers.rms_norm(kv[..., :m.kv_lora_rank], p["kv_norm"]["scale"],
+                          cfg.norm_eps)
+    kpe = kv[..., m.kv_lora_rank:][:, :, None, :]       # single shared head
+    kpe = apply_rope(kpe, positions, cfg.rope_theta, "full")[:, :, 0]
+
+    scale = qk_dim ** -0.5
+    window = spec.window or (cfg.decode_window if mode != "train" else None)
+
+    new_cache = None
+    if mode in ("train", "prefill"):
+        k_nope, v = _mla_expand(p, cfg, ckv)
+        k = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(kpe[:, :, None], (B, T, H, m.qk_rope_dim))],
+            axis=-1)
+        out = sdpa_masked(q, k, v, positions, positions, cfg.causal,
+                          window, None, scale)
+        if mode == "prefill":
+            new_cache = _fill_mla_cache(cache, ckv, kpe, T)
+    else:
+        # weight-absorbed MLA decode (DeepSeek-V2/V3): attention runs in
+        # the compressed kv_lora space — W_kb is absorbed into the query
+        # and W_vb into the output, so the (L, H, nope+v) expansion of the
+        # cache never materializes.  Exact algebra; ~1000x fewer decode
+        # FLOPs at L=32k (EXPERIMENTS.md §Perf hillclimb #5).
+        L = cache["ckv"].shape[1]
+        slot = jnp.mod(decode_pos, L)
+        cckv = jax.lax.dynamic_update_slice(cache["ckv"], ckv, (0, slot, 0))
+        ckpe = jax.lax.dynamic_update_slice(cache["kpe"], kpe, (0, slot, 0))
+        new_cache = {"ckv": cckv, "kpe": ckpe}
+        wk_b = p["wk_b"].reshape(m.kv_lora_rank, H, m.qk_nope_dim)
+        wv_b = p["wv_b"].reshape(m.kv_lora_rank, H, m.v_head_dim)
+        q_abs = jnp.einsum("bthn,rhn->bthr", q_nope, wk_b)    # (B,1,H,r)
+        s = jnp.einsum("bthr,bsr->bhts", q_abs.astype(jnp.float32),
+                       cckv.astype(jnp.float32))
+        s = s + jnp.einsum("bthp,bsp->bhts", q_pe.astype(jnp.float32),
+                           ckpe.astype(jnp.float32))
+        s = s * scale
+        k_pos, valid = _ring_positions(L, decode_pos + 1)
+        k_pos = jnp.broadcast_to(k_pos[None], (B, L))
+        valid = jnp.broadcast_to(valid[None], (B, L))
+        mask = make_mask(positions, k_pos, cfg.causal, window, valid)
+        s = jnp.where(mask, s, NEG_INF)
+        prob = jax.nn.softmax(s, axis=-1)
+        ctx = jnp.einsum("bhts,bsr->bthr", prob,
+                         cckv.astype(jnp.float32))            # (B,1,H,r)
+        out = jnp.einsum("bthr,rhv->bthv", ctx,
+                         wv_b.astype(jnp.float32)).astype(x.dtype)
+
+    y = out.reshape(B, T, H * m.v_head_dim) @ p["wo"]
+    return y, new_cache
+
+
+def _fill_mla_cache(cache, ckv, kpe, T):
+    L = cache["ckv"].shape[1]
+    if T <= L:
+        return {
+            "ckv": jax.lax.dynamic_update_slice(cache["ckv"], ckv, (0, 0, 0)),
+            "kpe": jax.lax.dynamic_update_slice(cache["kpe"], kpe, (0, 0, 0)),
+        }
+    shift = jnp.mod(T - L, L)
+    return {
+        "ckv": jnp.roll(ckv[:, T - L:], shift, axis=1),
+        "kpe": jnp.roll(kpe[:, T - L:], shift, axis=1),
+    }
+
+
+# ------------------------------------------------------------------ facade
+def init_attention(key, cfg: ModelConfig):
+    return init_mla(key, cfg) if cfg.mla else init_gqa(key, cfg)
+
+
+def init_attention_cache(cfg, spec, batch, cache_len, dtype):
+    if cfg.mla:
+        return init_mla_cache(cfg, spec, batch, cache_len, dtype)
+    return init_gqa_cache(cfg, spec, batch, cache_len, dtype)
+
+
+def apply_attention(p, cfg, spec, x, positions, mode="train", cache=None,
+                    decode_pos=None):
+    fn = apply_mla if cfg.mla else apply_gqa
+    return fn(p, cfg, spec, x, positions, mode=mode, cache=cache,
+              decode_pos=decode_pos)

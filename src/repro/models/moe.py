@@ -1,0 +1,153 @@
+"""Mixture-of-Experts with capacity-based sort dispatch (TPU-native).
+
+GPU MoE stacks typically use ragged grouped-GEMM CUDA kernels; the
+TPU-idiomatic formulation is static-shape capacity dispatch: tokens are
+argsorted by expert id, the first ``capacity`` tokens per expert are
+gathered into a dense (E, C, d) block, experts run as one batched einsum
+(MXU-friendly), and results scatter-add back with router weights.
+
+Two dispatch scopes (MoEConfig.dispatch):
+  "global"  — paper-faithful single token pool across the whole global
+              batch.  GSPMD implements the cross-shard gather as an
+              all-reduce of the full (E*C, d) dispatch buffer per layer —
+              19.6e12 collective bytes/device on grok-1 train_4k.
+  "batched" — routing + capacity per batch row (vmap over B).  Gathers
+              become shard-local (batch dim and gather indices share the
+              data sharding), eliminating the dispatch collectives
+              entirely; experts compute via the same batched einsum.
+              Capacity drops are decided per row instead of globally
+              (standard practice; quality-neutral at equal capacity
+              factor).  See EXPERIMENTS.md §Perf hillclimb #2.
+
+Experts shard over the ``model`` mesh axis ("expert" logical axis) when
+the expert count divides it, else tensor-parallel inside each expert
+(e.g. Grok-1's 8 experts on a 16-way model axis).
+
+Supports softmax top-k routing (Grok/Jamba/Mixtral-style) and DeepSeek-V3
+sigmoid routing with normalized top-k weights + shared experts.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import layers
+from .config import ModelConfig, MoEConfig
+from ..sharding import constrain
+
+
+def init_moe(key, cfg: ModelConfig):
+    m: MoEConfig = cfg.moe
+    dt = jnp.dtype(cfg.param_dtype)
+    k_router, k_g, k_u, k_d, k_s = jax.random.split(key, 5)
+    E, d, f = m.n_experts, cfg.d_model, m.d_ff
+    p = {
+        "router": {"w": layers.dense_init(k_router, d, E, jnp.float32)},
+        "experts": {
+            "w_gate": _stack_init(k_g, E, d, f, dt),
+            "w_up": _stack_init(k_u, E, d, f, dt),
+            "w_down": _stack_init(k_d, E, f, d, dt),
+        },
+    }
+    if m.n_shared_experts:
+        sf = (m.shared_d_ff or m.d_ff) * m.n_shared_experts
+        p["shared"] = layers.init_mlp(k_s, d, sf, dt)
+    return p
+
+
+def _stack_init(key, E, d_in, d_out, dt):
+    keys = jax.random.split(key, E)
+    return jax.vmap(lambda k: layers.dense_init(k, d_in, d_out, dt))(keys)
+
+
+def capacity(n_tokens: int, m: MoEConfig) -> int:
+    c = int(np.ceil(n_tokens * m.top_k / m.n_experts * m.capacity_factor))
+    return max(4, min(n_tokens, -(-c // 4) * 4))  # mult-of-4, >=4, <=T
+
+
+def route(x_flat, router_w, m: MoEConfig):
+    """x_flat: (T, d) -> (weights (T,k), idx (T,k), aux dict)."""
+    logits = (x_flat.astype(jnp.float32) @ router_w)      # (T, E)
+    if m.router == "sigmoid":                              # DeepSeek-V3
+        scores = jax.nn.sigmoid(logits)
+        w, idx = jax.lax.top_k(scores, m.top_k)
+        w = w / jnp.maximum(jnp.sum(w, -1, keepdims=True), 1e-9)
+        probs = scores / jnp.maximum(jnp.sum(scores, -1, keepdims=True),
+                                     1e-9)
+    else:
+        probs = jax.nn.softmax(logits, axis=-1)
+        w, idx = jax.lax.top_k(probs, m.top_k)
+        w = w / jnp.maximum(jnp.sum(w, -1, keepdims=True), 1e-9)
+    # load-balance aux (Switch-style): E * sum_i f_i * P_i
+    T = x_flat.shape[0]
+    f = jnp.zeros((m.n_experts,), jnp.float32).at[idx.reshape(-1)].add(1.0)
+    f = f / (T * m.top_k)
+    P = jnp.mean(probs, axis=0)
+    lb = m.n_experts * jnp.sum(f * P)
+    zl = jnp.mean(jnp.square(jax.scipy.special.logsumexp(logits, axis=-1)))
+    aux = {"load_balance": lb, "router_z": zl,
+           "aux_loss": m.aux_loss_weight * lb + m.router_z_weight * zl}
+    return w, idx, aux
+
+
+def _dispatch_tables(w, idx, T: int, E: int, k: int, C: int):
+    """Sort-based dispatch tables: slot -> (token id, combine weight)."""
+    e_flat = idx.reshape(-1)                               # (T*k,)
+    tok_of = jnp.arange(T * k, dtype=jnp.int32) // k       # (T*k,)
+    w_flat = w.reshape(-1)
+    order = jnp.argsort(e_flat)                            # group by expert
+    e_sorted = e_flat[order]
+    counts = jnp.bincount(e_flat, length=E)
+    starts = jnp.concatenate([jnp.zeros((1,), counts.dtype),
+                              jnp.cumsum(counts)[:-1]])
+    pos = jnp.arange(T * k, dtype=jnp.int32) - \
+        starts[e_sorted].astype(jnp.int32)
+    valid = pos < C
+    dest = jnp.where(valid, e_sorted * C + pos, E * C)     # overflow slot
+    slot_tok = jnp.zeros((E * C + 1,), jnp.int32).at[dest].set(tok_of[order])
+    slot_w = jnp.zeros((E * C + 1,), jnp.float32).at[dest].set(
+        jnp.where(valid, w_flat[order], 0.0))
+    return slot_tok[:-1], slot_w[:-1]
+
+
+def _expert_ffn(we, x_disp):
+    """x_disp: (..., E, C, d) -> (..., E, C, d) via batched MXU einsums."""
+    gate = jax.nn.silu(jnp.einsum("...ecd,edf->...ecf", x_disp,
+                                  we["w_gate"]))
+    up = jnp.einsum("...ecd,edf->...ecf", x_disp, we["w_up"])
+    return jnp.einsum("...ecf,efd->...ecd", gate * up, we["w_down"])
+
+
+def _moe_flat(p, m: MoEConfig, x_flat, C):
+    """Dispatch+compute+combine over one token pool (T, d)."""
+    T, d = x_flat.shape
+    E, k = m.n_experts, m.top_k
+    w, idx, aux = route(x_flat, p["router"]["w"], m)
+    slot_tok, slot_w = _dispatch_tables(w, idx, T, E, k, C)
+    x_disp = x_flat[slot_tok].reshape(E, C, d) * (
+        slot_w.reshape(E, C, 1) > 0).astype(x_flat.dtype)
+    y = _expert_ffn(p["experts"], x_disp)
+    y_flat = y.reshape(E * C, d) * slot_w[:, None].astype(y.dtype)
+    out = jnp.zeros((T, d), y.dtype).at[slot_tok].add(y_flat)
+    return out, aux
+
+
+def apply_moe(p, cfg: ModelConfig, x):
+    """x: (B, S, d) -> (B, S, d), aux."""
+    m = cfg.moe
+    B, S, d = x.shape
+    if m.dispatch == "batched":
+        x = constrain(x, "batch", None, None)
+        C = capacity(S, m)
+        out, aux = jax.vmap(lambda xr: _moe_flat(p, m, xr, C))(x)
+        aux = jax.tree.map(jnp.mean, aux)
+        out = constrain(out, "batch", None, None)
+    else:
+        T = B * S
+        x_flat = x.reshape(T, d)
+        out, aux = _moe_flat(p, m, x_flat, capacity(T, m))
+        out = out.reshape(B, S, d)
+    if "shared" in p:
+        out = out + layers.apply_mlp(p["shared"], x.reshape(B, S, d))
+    return out.reshape(B, S, d), aux

@@ -1,0 +1,52 @@
+"""Rotary position embeddings: standard ("full"), GLM partial-2d ("glm"),
+and none.  All functions take explicit integer positions so the same code
+serves train, prefill, and single-token decode.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def _rope_freqs(dim: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+
+
+def _rotate_half(x):
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    return jnp.concatenate([-x2, x1], axis=-1)
+
+
+def apply_rope(x, positions, theta: float, variant: str = "full"):
+    """x: (..., seq, heads, head_dim); positions: (..., seq) int32.
+
+    variant:
+      "none" -> identity
+      "full" -> rotary over the whole head_dim (non-interleaved halves)
+      "glm"  -> ChatGLM-style: rotary over the first half of head_dim only
+                (the "2d" scheme degenerates to 1d positions for standard
+                causal LM usage; the second half carries no rotation).
+    """
+    if variant == "none":
+        return x
+    head_dim = x.shape[-1]
+    if variant == "glm":
+        rot_dim = head_dim // 2
+        x_rot, x_pass = x[..., :rot_dim], x[..., rot_dim:]
+        x_rot = _apply(x_rot, positions, theta)
+        return jnp.concatenate([x_rot, x_pass], axis=-1)
+    if variant == "full":
+        return _apply(x, positions, theta)
+    raise ValueError(f"unknown rope variant {variant!r}")
+
+
+def _apply(x, positions, theta):
+    dt = x.dtype
+    dim = x.shape[-1]
+    freqs = _rope_freqs(dim, theta)                      # (dim/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., seq, dim/2)
+    angles = jnp.concatenate([angles, angles], axis=-1)  # (..., seq, dim)
+    # broadcast over the heads axis: x is (..., seq, heads, dim)
+    cos = jnp.cos(angles)[..., None, :]
+    sin = jnp.sin(angles)[..., None, :]
+    x32 = x.astype(jnp.float32)
+    return (x32 * cos + _rotate_half(x32) * sin).astype(dt)

@@ -1,0 +1,203 @@
+"""RWKV-6 ("Finch") mixer — data-dependent per-channel decay, attention-free.
+
+The recurrence per head (k/v head size ``hs``):
+
+    out_t = r_t^T (S_{t-1} + diag(u) k_t v_t^T)
+    S_t   = diag(w_t) S_{t-1} + k_t v_t^T        w_t = exp(-exp(w0 + lora(x)))
+
+GPU implementations fuse this into a CUDA kernel; the TPU adaptation runs a
+``lax.scan`` over fixed-size time chunks with ``jax.checkpoint`` on the
+chunk body, so the backward pass recomputes inside each chunk and only the
+per-chunk (B, H, hs, hs) states are saved — bounding HBM residuals without
+the numerically-delicate 1/∏w chunk-parallel decomposition (recorded as a
+§Perf candidate: GLA-style chunk-parallel Pallas kernel).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import layers
+from .config import ModelConfig, RWKVConfig
+
+CHUNK = 64
+
+
+def _dims(cfg: ModelConfig):
+    r: RWKVConfig = cfg.rwkv
+    H = cfg.d_model // r.head_size
+    return r, H, r.head_size
+
+
+def init_rwkv(key, cfg: ModelConfig):
+    r, H, hs = _dims(cfg)
+    d = cfg.d_model
+    dt = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 10)
+    return {
+        "mu_r": jnp.full((d,), 0.5, dt), "mu_k": jnp.full((d,), 0.5, dt),
+        "mu_v": jnp.full((d,), 0.5, dt), "mu_w": jnp.full((d,), 0.5, dt),
+        "mu_g": jnp.full((d,), 0.5, dt),
+        "wr6": layers.dense_init(ks[0], d, d, dt),
+        "wk6": layers.dense_init(ks[1], d, d, dt),
+        "wv6": layers.dense_init(ks[2], d, d, dt),
+        "wg6": layers.dense_init(ks[3], d, d, dt),
+        "wo6": layers.dense_init(ks[4], d, d, dt),
+        # data-dependent decay: w = exp(-exp(w0 + tanh(x_w @ w1) @ w2))
+        "w0": jnp.full((d,), -1.0, jnp.float32),
+        "lora_w1": layers.dense_init(ks[5], d, r.decay_lora, dt),
+        "lora_w2": layers.dense_init(ks[6], r.decay_lora, d, dt, scale=0.1),
+        "u": layers.truncated_normal(ks[7], (H, hs), jnp.float32, 0.5),
+        "ln_scale": jnp.ones((d,), dt), "ln_bias": jnp.zeros((d,), dt),
+    }
+
+
+def init_rwkv_cache(cfg: ModelConfig, batch, dtype):
+    r, H, hs = _dims(cfg)
+    return {
+        "tm_shift": jnp.zeros((batch, cfg.d_model), dtype),
+        "wkv": jnp.zeros((batch, H, hs, hs), jnp.float32),
+    }
+
+
+def _shift(x, last=None):
+    """x: (B,T,d) -> previous-token tensor, optionally seeded by `last`."""
+    prev = jnp.roll(x, 1, axis=1)
+    first = jnp.zeros_like(x[:, :1]) if last is None else last[:, None]
+    return jnp.concatenate([first, prev[:, 1:]], axis=1)
+
+
+def _mix(x, x_prev, mu):
+    return x + (x_prev - x) * mu
+
+
+def _decay(p, xw):
+    logw = -jnp.exp(p["w0"] + (jnp.tanh(xw @ p["lora_w1"]) @ p["lora_w2"])
+                    .astype(jnp.float32))
+    return jnp.exp(logw)                                  # in (0, 1)
+
+
+def _head_norm(p, out, B, T, d):
+    out = out.reshape(B, T, d)
+    mean = jnp.mean(out, -1, keepdims=True)
+    var = jnp.var(out, -1, keepdims=True)
+    out = (out - mean) * jax.lax.rsqrt(var + 1e-5)
+    return out * p["ln_scale"] + p["ln_bias"]
+
+
+def apply_rwkv(p, cfg: ModelConfig, x, mode="train", cache=None):
+    r_cfg, H, hs = _dims(cfg)
+    B, T, d = x.shape
+    if mode == "decode":
+        return _decode_step(p, cfg, x, cache)
+
+    x_prev = _shift(x)
+    xr = _mix(x, x_prev, p["mu_r"])
+    xk = _mix(x, x_prev, p["mu_k"])
+    xv = _mix(x, x_prev, p["mu_v"])
+    xw = _mix(x, x_prev, p["mu_w"])
+    xg = _mix(x, x_prev, p["mu_g"])
+
+    r = (xr @ p["wr6"]).reshape(B, T, H, hs).astype(jnp.float32)
+    k = (xk @ p["wk6"]).reshape(B, T, H, hs).astype(jnp.float32)
+    v = (xv @ p["wv6"]).reshape(B, T, H, hs).astype(jnp.float32)
+    g = jax.nn.silu(xg @ p["wg6"])
+    w = _decay(p, xw).reshape(B, T, H, hs)
+    u = p["u"]
+
+    chunk = min(CHUNK, T)
+    assert T % chunk == 0, (T, chunk)
+    n_chunks = T // chunk
+
+    def step(S, inp):
+        r_t, k_t, v_t, w_t = inp                          # (B,H,hs)
+        kv = k_t[..., :, None] * v_t[..., None, :]        # (B,H,hs,hs)
+        out = jnp.einsum("bhk,bhkv->bhv", r_t,
+                         S + u[None, :, :, None] * kv)
+        S = w_t[..., :, None] * S + kv
+        return S, out
+
+    def chunk_body(S, inp):
+        # unroll: XLA fuses u consecutive elementwise state updates into
+        # one fusion -> the (B,H,hs,hs) state buffer is read/written once
+        # per u steps instead of every step (SS§Perf hillclimb #1)
+        return jax.lax.scan(step, S, inp, unroll=8)
+
+    chunk_body = jax.checkpoint(chunk_body)
+
+    def to_chunks(a):                                     # (B,T,H,hs)->(nc,chunk,B,H,hs)
+        return a.reshape(B, n_chunks, chunk, H, hs).transpose(1, 2, 0, 3, 4)
+
+    S0 = (jnp.zeros((B, H, hs, hs), jnp.float32) if cache is None
+          else cache["wkv"])
+
+    def outer(S, inp):
+        return chunk_body(S, inp)
+
+    S_last, outs = jax.lax.scan(
+        outer, S0, (to_chunks(r), to_chunks(k), to_chunks(v), to_chunks(w)))
+    out = outs.transpose(2, 0, 1, 3, 4).reshape(B, T, H * hs)
+
+    out = _head_norm(p, out.astype(x.dtype), B, T, d) * g
+    y = out @ p["wo6"]
+
+    new_cache = None
+    if mode == "prefill":
+        new_cache = {"tm_shift": x[:, -1], "wkv": S_last}
+    return y, new_cache
+
+
+def _decode_step(p, cfg, x, cache):
+    r_cfg, H, hs = _dims(cfg)
+    B, _, d = x.shape
+    xt = x[:, 0]
+    prev = cache["tm_shift"]
+    xr = _mix(xt, prev, p["mu_r"]); xk = _mix(xt, prev, p["mu_k"])
+    xv = _mix(xt, prev, p["mu_v"]); xw = _mix(xt, prev, p["mu_w"])
+    xg = _mix(xt, prev, p["mu_g"])
+    r = (xr @ p["wr6"]).reshape(B, H, hs).astype(jnp.float32)
+    k = (xk @ p["wk6"]).reshape(B, H, hs).astype(jnp.float32)
+    v = (xv @ p["wv6"]).reshape(B, H, hs).astype(jnp.float32)
+    g = jax.nn.silu(xg @ p["wg6"])
+    w = _decay(p, xw).reshape(B, H, hs)
+    S = cache["wkv"]
+    kv = k[..., :, None] * v[..., None, :]
+    out = jnp.einsum("bhk,bhkv->bhv", r, S + p["u"][None, :, :, None] * kv)
+    S = w[..., :, None] * S + kv
+    out = _head_norm(p, out.reshape(B, 1, d).astype(x.dtype), B, 1, d) * g[:, None]
+    y = out @ p["wo6"]
+    return y, {"tm_shift": xt, "wkv": S}
+
+
+# ----------------------------------------------------------- channel mix
+def init_rwkv_cmix(key, cfg: ModelConfig):
+    d, f = cfg.d_model, cfg.d_ff
+    dt = jnp.dtype(cfg.param_dtype)
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "mu_ck": jnp.full((d,), 0.5, dt), "mu_cr": jnp.full((d,), 0.5, dt),
+        "wk_c": layers.dense_init(k1, d, f, dt),
+        "wv_c": layers.dense_init(k2, f, d, dt),
+        "wr_c": layers.dense_init(k3, d, d, dt),
+    }
+
+
+def init_cmix_cache(cfg: ModelConfig, batch, dtype):
+    return {"cm_shift": jnp.zeros((batch, cfg.d_model), dtype)}
+
+
+def apply_rwkv_cmix(p, cfg: ModelConfig, x, mode="train", cache=None):
+    B, T, d = x.shape
+    last = cache["cm_shift"] if (mode == "decode" and cache) else None
+    x_prev = _shift(x, last) if mode != "decode" else (
+        cache["cm_shift"][:, None] if cache else jnp.zeros_like(x))
+    xk = _mix(x, x_prev, p["mu_ck"])
+    xr = _mix(x, x_prev, p["mu_cr"])
+    kk = jnp.square(jax.nn.relu(xk @ p["wk_c"]))
+    y = jax.nn.sigmoid(xr @ p["wr_c"]) * (kk @ p["wv_c"])
+    new_cache = None
+    if mode == "prefill":
+        new_cache = {"cm_shift": x[:, -1]}
+    elif mode == "decode":
+        new_cache = {"cm_shift": x[:, 0]}
+    return y, new_cache

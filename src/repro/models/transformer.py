@@ -1,0 +1,259 @@
+"""Composable model: stages of scanned layer periods over any mixer/ffn mix.
+
+One code path serves all ten assigned architectures and all three execution
+modes (train / prefill / decode).  Layer stacks run under ``jax.lax.scan``
+over stacked period parameters so the lowered HLO is O(pattern) rather than
+O(n_layers) — essential for compiling 61-layer models on 512 host devices.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import attention, layers, mamba, moe, rwkv
+from .config import LayerSpec, ModelConfig, Stage
+from ..sharding import constrain
+
+ZERO_AUX = {"aux_loss": 0.0, "load_balance": 0.0, "router_z": 0.0}
+
+
+# ------------------------------------------------------------------ layers
+def init_layer(key, cfg: ModelConfig, spec: LayerSpec):
+    k_mix, k_ffn = jax.random.split(key)
+    dt = jnp.dtype(cfg.param_dtype)
+    p: Dict[str, Any] = {"mixer_norm": layers.init_rms_norm(cfg.d_model, dt)}
+    if spec.mixer == "attn":
+        p["mixer"] = attention.init_attention(k_mix, cfg)
+    elif spec.mixer == "mamba":
+        p["mixer"] = mamba.init_mamba(k_mix, cfg)
+    elif spec.mixer == "rwkv":
+        p["mixer"] = rwkv.init_rwkv(k_mix, cfg)
+    else:
+        raise ValueError(spec.mixer)
+    if spec.ffn != "none":
+        p["ffn_norm"] = layers.init_rms_norm(cfg.d_model, dt)
+    if spec.ffn == "dense":
+        p["ffn"] = layers.init_mlp(k_ffn, cfg.d_model, cfg.d_ff, dt)
+    elif spec.ffn == "moe":
+        p["ffn"] = moe.init_moe(k_ffn, cfg)
+    elif spec.ffn == "rwkv_cmix":
+        p["ffn"] = rwkv.init_rwkv_cmix(k_ffn, cfg)
+    return p
+
+
+def init_layer_cache(cfg: ModelConfig, spec: LayerSpec, batch, cache_len,
+                     dtype):
+    c: Dict[str, Any] = {}
+    if spec.mixer == "attn":
+        c["mixer"] = attention.init_attention_cache(cfg, spec, batch,
+                                                    cache_len, dtype)
+    elif spec.mixer == "mamba":
+        c["mixer"] = mamba.init_mamba_cache(cfg, batch, dtype)
+    elif spec.mixer == "rwkv":
+        c["mixer"] = rwkv.init_rwkv_cache(cfg, batch, dtype)
+    c["ffn"] = (rwkv.init_cmix_cache(cfg, batch, dtype)
+                if spec.ffn == "rwkv_cmix" else {})
+    return c
+
+
+def apply_layer(p, cfg: ModelConfig, spec: LayerSpec, h, positions,
+                mode="train", cache=None, decode_pos=None):
+    cache = cache or {}
+    h_norm = layers.apply_rms_norm(p["mixer_norm"], h, cfg.norm_eps)
+    if spec.mixer == "attn":
+        y, mc = attention.apply_attention(p["mixer"], cfg, spec, h_norm,
+                                          positions, mode=mode,
+                                          cache=cache.get("mixer"),
+                                          decode_pos=decode_pos)
+    elif spec.mixer == "mamba":
+        y, mc = mamba.apply_mamba(p["mixer"], cfg, h_norm, mode=mode,
+                                  cache=cache.get("mixer"))
+    else:
+        y, mc = rwkv.apply_rwkv(p["mixer"], cfg, h_norm, mode=mode,
+                                cache=cache.get("mixer"))
+    h = h + y
+    h = constrain(h, "batch", "seq", None)
+
+    aux = dict(ZERO_AUX)
+    fc: Any = {}
+    if spec.ffn != "none":
+        f_norm = layers.apply_rms_norm(p["ffn_norm"], h, cfg.norm_eps)
+        if spec.ffn == "dense":
+            f = layers.apply_mlp(p["ffn"], f_norm)
+        elif spec.ffn == "moe":
+            f, moe_aux = moe.apply_moe(p["ffn"], cfg, f_norm)
+            aux.update(moe_aux)
+        else:
+            f, fc = rwkv.apply_rwkv_cmix(p["ffn"], cfg, f_norm, mode=mode,
+                                         cache=cache.get("ffn"))
+            fc = fc or {}
+        h = h + f
+        h = constrain(h, "batch", "seq", None)
+    new_cache = {"mixer": mc if mc is not None else {}, "ffn": fc}
+    return h, new_cache, aux
+
+
+# ------------------------------------------------------------------ stages
+def init_stage(key, cfg: ModelConfig, stage: Stage):
+    layer_stacks = []
+    for j, spec in enumerate(stage.pattern):
+        keys = jax.random.split(jax.random.fold_in(key, j), stage.repeats)
+        layer_stacks.append(
+            jax.vmap(lambda k, s=spec: init_layer(k, cfg, s))(keys))
+    return {"layers": layer_stacks}
+
+
+def init_stage_cache(cfg, stage: Stage, batch, cache_len, dtype):
+    stacks = []
+    for spec in stage.pattern:
+        proto = init_layer_cache(cfg, spec, batch, cache_len, dtype)
+        stacks.append(jax.tree.map(
+            lambda a: jnp.zeros((stage.repeats,) + a.shape, a.dtype), proto))
+    return {"caches": stacks}
+
+
+def run_stage(stage_p, cfg: ModelConfig, stage: Stage, h, positions,
+              mode="train", stage_cache=None, decode_pos=None, remat=False):
+    pattern = stage.pattern
+    with_cache = stage_cache is not None
+
+    def body(carry, xs):
+        hh = carry
+        if with_cache:
+            layer_ps, caches = xs
+        else:
+            layer_ps, caches = xs, [None] * len(pattern)
+        new_caches, aux_tot = [], dict(ZERO_AUX)
+        for j, spec in enumerate(pattern):
+            hh, nc, aux = apply_layer(layer_ps[j], cfg, spec, hh, positions,
+                                      mode=mode, cache=caches[j],
+                                      decode_pos=decode_pos)
+            new_caches.append(nc)
+            aux_tot = {k: aux_tot[k] + aux[k] for k in aux_tot}
+        ys = (new_caches, aux_tot) if with_cache else aux_tot
+        return hh, ys
+
+    if remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    xs = ((stage_p["layers"], stage_cache["caches"]) if with_cache
+          else stage_p["layers"])
+    h, ys = jax.lax.scan(body, h, xs)
+    if with_cache:
+        new_caches, auxs = ys
+        new_cache = {"caches": new_caches}
+    else:
+        new_caches, auxs = None, ys
+        new_cache = None
+    aux = {k: jnp.sum(auxs[k]) for k in ZERO_AUX}
+    return h, new_cache, aux
+
+
+# ------------------------------------------------------------------ model
+def init_model(cfg: ModelConfig, rng):
+    ks = jax.random.split(rng, 8)
+    dt = jnp.dtype(cfg.param_dtype)
+    p: Dict[str, Any] = {}
+    if cfg.modality != "audio":
+        p["embed"] = layers.init_embedding(ks[0], cfg.vocab_size,
+                                           cfg.d_model, dt)
+    if cfg.modality in ("audio", "vlm"):
+        p["frontend"] = {"w": layers.dense_init(ks[1], cfg.frontend_dim,
+                                                cfg.d_model, dt)}
+    p["stages"] = [init_stage(jax.random.fold_in(ks[2], i), cfg, s)
+                   for i, s in enumerate(cfg.stages)]
+    p["final_norm"] = layers.init_rms_norm(cfg.d_model, dt)
+    if not cfg.tie_embeddings:
+        p["unembed"] = layers.init_unembed(ks[3], cfg.d_model, cfg.vocab_size,
+                                           dt)
+    if cfg.mtp:
+        p["mtp"] = {
+            "proj": layers.dense_init(ks[4], 2 * cfg.d_model, cfg.d_model, dt),
+            "norm_h": layers.init_rms_norm(cfg.d_model, dt),
+            "norm_e": layers.init_rms_norm(cfg.d_model, dt),
+            "layer": init_layer(ks[5], cfg, LayerSpec("attn", "dense")),
+            "final_norm": layers.init_rms_norm(cfg.d_model, dt),
+        }
+    return p
+
+
+def init_cache(cfg: ModelConfig, batch, cache_len, dtype=None):
+    dtype = jnp.dtype(dtype or cfg.dtype)
+    return [init_stage_cache(cfg, s, batch, cache_len, dtype)
+            for s in cfg.stages]
+
+
+def _embed_inputs(p, cfg: ModelConfig, batch_in):
+    if cfg.modality == "audio":
+        h = batch_in["features"] @ p["frontend"]["w"]
+    elif cfg.modality == "vlm" and "image_embeds" in batch_in:
+        img = batch_in["image_embeds"] @ p["frontend"]["w"]
+        txt = layers.apply_embedding(p["embed"], batch_in["tokens"])
+        h = jnp.concatenate([img, txt], axis=1)
+    else:
+        h = layers.apply_embedding(p["embed"], batch_in["tokens"])
+    return h.astype(jnp.dtype(cfg.dtype))
+
+
+def _unembed(p, cfg: ModelConfig, h):
+    if cfg.tie_embeddings:
+        logits = h @ p["embed"]["table"].T
+    else:
+        logits = layers.apply_unembed(p["unembed"], h)
+    padded = logits.shape[-1]
+    if padded != cfg.vocab_size:  # mask pad slots out of the softmax
+        neg = jnp.asarray(jnp.finfo(logits.dtype).min, logits.dtype)
+        valid = jnp.arange(padded) < cfg.vocab_size
+        logits = jnp.where(valid, logits, neg)
+    return logits
+
+
+def logits_fn(p, cfg: ModelConfig, h):
+    h = layers.apply_rms_norm(p["final_norm"], h, cfg.norm_eps)
+    return _unembed(p, cfg, h)
+
+
+def model_apply(p, cfg: ModelConfig, batch_in: Dict[str, Any],
+                mode: str = "train", cache: Optional[List] = None,
+                decode_pos=None, remat: bool = False):
+    """Returns (logits, new_cache, aux)."""
+    h = _embed_inputs(p, cfg, batch_in)
+    B, S, _ = h.shape
+    h = constrain(h, "batch", "seq", None)
+    if mode == "decode":
+        positions = jnp.broadcast_to(decode_pos, (B, 1)).astype(jnp.int32)
+    else:
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+
+    new_caches, aux_tot = [], dict(ZERO_AUX)
+    for i, stage in enumerate(cfg.stages):
+        sc = cache[i] if cache is not None else None
+        h, nc, aux = run_stage(p["stages"][i], cfg, stage, h, positions,
+                               mode=mode, stage_cache=sc,
+                               decode_pos=decode_pos, remat=remat)
+        new_caches.append(nc)
+        aux_tot = {k: aux_tot[k] + aux[k] for k in aux_tot}
+
+    logits = logits_fn(p, cfg, h)
+    logits = constrain(logits, "batch", "seq", "tensor")
+
+    if cfg.mtp and mode == "train":
+        aux_tot["mtp_logits"] = _mtp_logits(p, cfg, h, batch_in, positions)
+    return logits, (new_caches if cache is not None else None), aux_tot
+
+
+def _mtp_logits(p, cfg, h, batch_in, positions):
+    """DeepSeek-V3 multi-token prediction: one extra block predicting t+2
+    from (h_t, emb(token_{t+1}))."""
+    mp = p["mtp"]
+    tokens = batch_in["tokens"]
+    nxt = jnp.roll(tokens, -1, axis=1)
+    emb = layers.apply_embedding(p["embed"], nxt).astype(h.dtype)
+    hn = layers.apply_rms_norm(mp["norm_h"], h, cfg.norm_eps)
+    en = layers.apply_rms_norm(mp["norm_e"], emb, cfg.norm_eps)
+    x = jnp.concatenate([hn, en], axis=-1) @ mp["proj"]
+    x, _, _ = apply_layer(mp["layer"], cfg, LayerSpec("attn", "dense"), x,
+                          positions, mode="train")
+    x = layers.apply_rms_norm(mp["final_norm"], x, cfg.norm_eps)
+    return _unembed(p, cfg, x)

@@ -1,0 +1,4 @@
+from .adamw import AdamWConfig, adamw_init, adamw_update
+from .schedules import make_schedule
+
+__all__ = ["AdamWConfig", "adamw_init", "adamw_update", "make_schedule"]

@@ -1,0 +1,35 @@
+"""LR schedules: linear-warmup cosine, and MiniCPM's WSD
+(Warmup-Stable-Decay, arXiv:2404.06395 §4): linear warmup to peak, a long
+stable plateau, then an exponential decay tail."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def make_schedule(kind: str, peak_lr: float, total_steps: int,
+                  warmup_steps: int = 100, decay_frac: float = 0.1,
+                  final_frac: float = 0.1):
+    warmup_steps = max(1, min(warmup_steps, total_steps // 2))
+
+    def cosine(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = peak_lr * step / warmup_steps
+        prog = jnp.clip((step - warmup_steps) /
+                        jnp.maximum(total_steps - warmup_steps, 1), 0.0, 1.0)
+        cos = peak_lr * (final_frac + (1 - final_frac)
+                         * 0.5 * (1 + jnp.cos(jnp.pi * prog)))
+        return jnp.where(step < warmup_steps, warm, cos)
+
+    def wsd(step):
+        step = jnp.asarray(step, jnp.float32)
+        decay_steps = jnp.maximum(total_steps * decay_frac, 1.0)
+        decay_start = total_steps - decay_steps
+        warm = peak_lr * step / warmup_steps
+        stable = jnp.full_like(step, peak_lr)
+        prog = jnp.clip((step - decay_start) / decay_steps, 0.0, 1.0)
+        decay = peak_lr * (final_frac ** prog)
+        out = jnp.where(step < warmup_steps, warm,
+                        jnp.where(step < decay_start, stable, decay))
+        return out
+
+    return {"cosine": cosine, "wsd": wsd}[kind]

@@ -1,0 +1,9 @@
+from .specs import concrete_batch, input_specs, make_positions
+from .steps import (TrainState, loss_fn, make_decode_step, make_prefill_step,
+                    make_train_step, train_state_init)
+
+__all__ = [
+    "TrainState", "concrete_batch", "input_specs", "loss_fn",
+    "make_decode_step", "make_positions", "make_prefill_step",
+    "make_train_step", "train_state_init",
+]

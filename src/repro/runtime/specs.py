@@ -1,0 +1,97 @@
+"""Input specs: ShapeDtypeStruct stand-ins (dry-run) and concrete batches
+(smoke tests / examples) for every (architecture × input shape) pair."""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import SHAPES, InputShape
+from ..models import init_cache
+from ..models.config import ModelConfig
+
+
+def make_positions(B, S):
+    return jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+
+
+def _train_tree(cfg: ModelConfig, B, S, make):
+    act = jnp.dtype(cfg.dtype)
+    tree: Dict = {}
+    if cfg.modality == "audio":
+        tree["features"] = make((B, S, cfg.frontend_dim), act)
+        tree["labels"] = make((B, S), jnp.int32)
+        tree["loss_mask"] = make((B, S), jnp.float32)
+        return tree
+    if cfg.modality == "vlm":
+        n_img = cfg.n_frontend_tokens
+        tree["tokens"] = make((B, S - n_img), jnp.int32)
+        tree["image_embeds"] = make((B, n_img, cfg.frontend_dim), act)
+    else:
+        tree["tokens"] = make((B, S), jnp.int32)
+    tree["labels"] = make((B, S), jnp.int32)
+    tree["loss_mask"] = make((B, S), jnp.float32)
+    return tree
+
+
+def _prefill_tree(cfg: ModelConfig, B, S, make):
+    act = jnp.dtype(cfg.dtype)
+    tree: Dict = {}
+    if cfg.modality == "audio":
+        tree["features"] = make((B, S, cfg.frontend_dim), act)
+    elif cfg.modality == "vlm":
+        n_img = cfg.n_frontend_tokens
+        tree["tokens"] = make((B, S - n_img), jnp.int32)
+        tree["image_embeds"] = make((B, n_img, cfg.frontend_dim), act)
+    else:
+        tree["tokens"] = make((B, S), jnp.int32)
+    return tree
+
+
+def input_specs(cfg: ModelConfig, shape: str | InputShape):
+    """ShapeDtypeStruct pytree for the lowered step (no allocation)."""
+    sh = SHAPES[shape] if isinstance(shape, str) else shape
+    B, S = sh.global_batch, sh.seq_len
+    make = lambda s, d: jax.ShapeDtypeStruct(s, d)
+    if sh.kind == "train":
+        return _train_tree(cfg, B, S, make)
+    if sh.kind == "prefill":
+        return _prefill_tree(cfg, B, S, make)
+    # decode: one new token against a cache of S positions
+    cache = jax.eval_shape(lambda: init_cache(cfg, B, S))
+    return {
+        "tokens": make((B, 1), jnp.int32),
+        "cache": cache,
+        "decode_pos": make((), jnp.int32),
+    }
+
+
+def concrete_batch(cfg: ModelConfig, shape: str | InputShape, seed=0):
+    """Small concrete batch for smoke tests and CPU examples."""
+    sh = SHAPES[shape] if isinstance(shape, str) else shape
+    B, S = sh.global_batch, sh.seq_len
+    rng = np.random.default_rng(seed)
+    act = jnp.dtype(cfg.dtype)
+
+    def make(s, d):
+        if jnp.issubdtype(d, jnp.integer):
+            hi = max(2, cfg.vocab_size - 1)
+            return jnp.asarray(rng.integers(0, hi, size=s), d)
+        if s and s[-1] == 1 and len(s) == 2:
+            pass
+        arr = rng.standard_normal(size=s).astype(np.float32)
+        return jnp.asarray(arr, d)
+
+    if sh.kind == "train":
+        tree = _train_tree(cfg, B, S, make)
+        tree["loss_mask"] = jnp.ones((B, S), jnp.float32)
+        return tree
+    if sh.kind == "prefill":
+        return _prefill_tree(cfg, B, S, make)
+    return {
+        "tokens": make((B, 1), jnp.int32),
+        "cache": init_cache(cfg, B, S),
+        "decode_pos": jnp.asarray(S, jnp.int32),
+    }

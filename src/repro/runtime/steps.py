@@ -1,0 +1,92 @@
+"""Train / prefill / decode step builders shared by smoke tests, examples,
+the serving runtime, and the multi-pod dry-run."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from ..models import init_cache, init_model, model_apply
+from ..models.config import ModelConfig
+from ..models.layers import cross_entropy
+from ..optim import AdamWConfig, adamw_init, adamw_update
+from ..sharding.rules import constrain_like_params
+
+
+@dataclass
+class TrainState:
+    params: Any
+    opt_state: Any
+
+
+def train_state_init(cfg: ModelConfig, rng, opt_cfg: AdamWConfig):
+    params = init_model(cfg, rng)
+    return {"params": params, "opt": adamw_init(params, opt_cfg)}
+
+
+def loss_fn(params, cfg: ModelConfig, batch: Dict, remat=False):
+    logits, _, aux = model_apply(params, cfg, batch, mode="train",
+                                 remat=remat)
+    labels = batch["labels"]
+    mask = batch.get("loss_mask")
+    loss = cross_entropy(logits, labels, mask)
+    metrics = {"ce_loss": loss, "aux_loss": aux["aux_loss"],
+               "load_balance": aux["load_balance"]}
+    total = loss + aux["aux_loss"]
+    if cfg.mtp and "mtp_logits" in aux:
+        mtp_labels = jnp.roll(labels, -1, axis=1)
+        mtp_mask = (mask if mask is not None
+                    else jnp.ones(labels.shape, jnp.float32))
+        mtp_mask = mtp_mask.at[:, -2:].set(0.0)
+        mtp_loss = cross_entropy(aux["mtp_logits"], mtp_labels, mtp_mask)
+        total = total + cfg.mtp_loss_weight * mtp_loss
+        metrics["mtp_loss"] = mtp_loss
+    metrics["total_loss"] = total
+    return total, metrics
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: AdamWConfig, schedule,
+                    remat: bool = True):
+    def train_step(state, batch):
+        (_, metrics), grads = jax.value_and_grad(
+            lambda p: loss_fn(p, cfg, batch, remat=remat), has_aux=True
+        )(state["params"])
+        grads = constrain_like_params(grads)
+        lr = schedule(state["opt"]["step"])
+        params, opt, gnorm = adamw_update(state["params"], grads,
+                                          state["opt"], opt_cfg, lr)
+        metrics = dict(metrics, grad_norm=gnorm, lr=lr)
+        return {"params": params, "opt": opt}, metrics
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, cache_len: int | None = None):
+    def prefill(params, batch):
+        B = (batch["features"] if cfg.modality == "audio"
+             else batch["tokens"]).shape[0]
+        S = _seq_len(cfg, batch)
+        cache = init_cache(cfg, B, cache_len or S)
+        logits, cache, _ = model_apply(params, cfg, batch, mode="prefill",
+                                       cache=cache)
+        return logits[:, -1], cache
+    return prefill
+
+
+def make_decode_step(cfg: ModelConfig):
+    def decode(params, batch):
+        logits, cache, _ = model_apply(
+            params, cfg, {"tokens": batch["tokens"]}, mode="decode",
+            cache=batch["cache"], decode_pos=batch["decode_pos"])
+        return logits[:, -1], cache
+    return decode
+
+
+def _seq_len(cfg: ModelConfig, batch):
+    if cfg.modality == "audio":
+        return batch["features"].shape[1]
+    S = batch["tokens"].shape[1]
+    if cfg.modality == "vlm" and "image_embeds" in batch:
+        S += batch["image_embeds"].shape[1]
+    return S

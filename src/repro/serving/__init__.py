@@ -1,0 +1,3 @@
+from .engine import Request, Response, ReplicaExecutor, ServingEngine
+
+__all__ = ["Request", "Response", "ReplicaExecutor", "ServingEngine"]

@@ -1,0 +1,9 @@
+from .context import (active_mesh, constrain, mesh_context, logical_to_mesh,
+                      resolve_spec)
+from .rules import param_specs, param_shardings, batch_spec, input_shardings
+
+__all__ = [
+    "active_mesh", "constrain", "mesh_context", "logical_to_mesh",
+    "resolve_spec", "param_specs", "param_shardings", "batch_spec",
+    "input_shardings",
+]

@@ -1,0 +1,90 @@
+"""Mesh-free sharding hooks.
+
+Model code annotates activations with *logical* axis names via
+``constrain(x, "batch", None, "tensor")``.  Outside a mesh context this is
+an identity; inside ``mesh_context(mesh)`` the names resolve to mesh axes
+(with divisibility fallbacks) and become
+``jax.lax.with_sharding_constraint`` calls.  This keeps every model file
+independent of the production mesh while letting the dry-run/launchers pin
+the distribution the paper's replica-parallel serving requires.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_state = threading.local()
+
+# logical axis -> preferred mesh axes (in order; filtered by mesh presence)
+LOGICAL_AXES = {
+    "batch": ("pod", "data"),        # global batch / token parallelism
+    "fsdp": ("pod", "data"),         # parameter (ZeRO-3 style) sharding
+    "tensor": ("model",),            # head / ff / vocab tensor parallelism
+    "expert": ("model",),            # expert parallelism
+    "kv_len": ("data", "model"),     # KV-cache length sharding (decode)
+    "seq": ("model",),               # sequence-parallel activations (train)
+    "replica": ("data",),            # paper's n parallel detection models
+}
+
+
+def active_mesh() -> Optional[Mesh]:
+    return getattr(_state, "mesh", None)
+
+
+@contextlib.contextmanager
+def mesh_context(mesh: Mesh):
+    prev = getattr(_state, "mesh", None)
+    _state.mesh = mesh
+    try:
+        with mesh:
+            yield mesh
+    finally:
+        _state.mesh = prev
+
+
+def logical_to_mesh(name: Optional[str], mesh: Mesh) -> Tuple[str, ...]:
+    if name is None:
+        return ()
+    return tuple(a for a in LOGICAL_AXES[name] if a in mesh.axis_names)
+
+
+def resolve_spec(logical: Sequence[Optional[str]], shape, mesh: Mesh) -> P:
+    """Logical per-dim names -> PartitionSpec with divisibility fallback."""
+    entries = []
+    used = set()
+    for dim, name in zip(shape, logical):
+        axes = tuple(a for a in logical_to_mesh(name, mesh) if a not in used)
+        size = 1
+        for a in axes:
+            size *= mesh.shape[a]
+        if axes and size > 1 and dim % size == 0:
+            entries.append(axes if len(axes) > 1 else axes[0])
+            used.update(axes)
+        else:
+            # per-axis partial fallback: try the single largest dividing axis
+            picked = None
+            for a in axes:
+                if dim % mesh.shape[a] == 0 and mesh.shape[a] > 1:
+                    picked = a
+                    break
+            if picked is not None:
+                entries.append(picked)
+                used.add(picked)
+            else:
+                entries.append(None)
+    return P(*entries)
+
+
+def constrain(x, *logical: Optional[str]):
+    """Annotate activation ``x`` with logical axes; identity off-mesh."""
+    mesh = active_mesh()
+    if mesh is None:
+        return x
+    if x.ndim != len(logical):
+        raise ValueError(f"rank mismatch {x.shape} vs {logical}")
+    spec = resolve_spec(logical, x.shape, mesh)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

@@ -1,0 +1,180 @@
+"""Behaviour tests for the paper's core system: λ/μ/σ math, n-selection,
+scheduler semantics, sequence synchronization, and mAP degradation."""
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (DEVICE_PROFILES, MODEL_PROFILES, DetectorExecutor,
+                        FrameStream, ParallelDetector, SequenceSynchronizer,
+                        SyntheticVideo, VideoSpec, choose_n, make_scheduler,
+                        n_range, simulate)
+
+
+def run(video="ETH-Sunnyday", model="yolov3", devices=("ncs2",),
+        sched="fcfs", **kw):
+    return ParallelDetector(video, model, list(devices), sched, **kw)
+
+
+# --------------------------------------------------------------- §II math
+def test_drop_math_single_stick():
+    """Paper §II-B: λ=14, μ=2.5 -> ~5 random drops per processed frame."""
+    r = run(devices=["ncs2"]).run(with_map=False)
+    assert 4.0 <= r.drops_per_processed <= 5.5
+
+
+def test_n_range_matches_paper_examples():
+    assert n_range(14, 2.5) == (4, 6)          # §III-B worked example
+    assert n_range(30, 2.3) == (5, 14)         # §IV-A SSD on ADL
+    assert n_range(30, 2.5) == (4, 12)         # §IV-A YOLO on ADL
+    assert choose_n(14, 2.5) == 4
+    assert choose_n(14, 2.5, "conservative") == 6
+
+
+def test_n_range_low_lambda_is_conservative():
+    lo, hi = n_range(10, 2.5)                  # λ <= 12: single bound
+    assert lo == hi == 4
+
+
+# ------------------------------------------------------- linear scalability
+@pytest.mark.parametrize("model", ["yolov3", "ssd300"])
+def test_linear_scaling_with_n(model):
+    mu = DEVICE_PROFILES["ncs2"].mu(model)
+    for n in (1, 3, 5, 7):
+        r = run(model=model, devices=["ncs2"] * n).run(with_map=False)
+        assert r.sigma == pytest.approx(n * mu, rel=0.08)
+
+
+def test_parallel_detection_closes_fps_gap():
+    """The paper's headline: n in the recommended range delivers >=10 FPS
+    near-real-time processing on a 14 FPS stream."""
+    n = choose_n(14, 2.5)
+    r = run(devices=["ncs2"] * n).run(with_map=False)
+    assert r.sigma >= 9.4
+
+
+# ------------------------------------------------------------- schedulers
+def test_fcfs_beats_rr_on_heterogeneous():
+    devs = ["fast_cpu"] + ["ncs2"] * 7
+    rr = run(devices=devs, sched="rr").run(with_map=False)
+    fcfs = run(devices=devs, sched="fcfs").run(with_map=False)
+    assert fcfs.sigma > 1.3 * rr.sigma
+    # Table VII shape: RR ~= 8 x min(mu), FCFS ~= sum(mu)
+    assert rr.sigma == pytest.approx(8 * 2.5, rel=0.12)
+    assert fcfs.sigma == pytest.approx(13.5 + 7 * 2.5, rel=0.12)
+
+
+def test_fcfs_equals_rr_on_homogeneous():
+    rr = run(devices=["ncs2"] * 4, sched="rr").run(with_map=False)
+    fcfs = run(devices=["ncs2"] * 4, sched="fcfs").run(with_map=False)
+    assert rr.sigma == pytest.approx(fcfs.sigma, rel=0.08)
+
+
+def test_slow_device_drags_rr_but_not_fcfs():
+    devs = ["slow_cpu"] + ["ncs2"] * 7
+    rr = run(devices=devs, sched="rr").run(with_map=False)
+    fcfs = run(devices=devs, sched="fcfs").run(with_map=False)
+    assert rr.sigma < 4.0                       # paper: 3.4
+    assert fcfs.sigma > 14.0                    # paper: 17.9
+
+
+def test_weighted_rr_recovers_heterogeneous_throughput():
+    devs = ["fast_cpu"] + ["ncs2"] * 3
+    wrr = run(devices=devs, sched="wrr").run(with_map=False)
+    rr = run(devices=devs, sched="rr").run(with_map=False)
+    assert wrr.sigma > rr.sigma
+
+
+def test_proportional_converges_to_weighted():
+    devs = ["fast_cpu"] + ["ncs2"] * 3
+    prop = run(devices=devs, sched="proportional").run(with_map=False)
+    wrr = run(devices=devs, sched="wrr").run(with_map=False)
+    assert prop.sigma == pytest.approx(wrr.sigma, rel=0.25)
+    assert prop.sigma > 12.0
+
+
+# ----------------------------------------------------------- synchronizer
+def test_synchronizer_order_and_stale_fill():
+    det = run(devices=["ncs2"] * 2)
+    from repro.core.simulator import simulate as sim
+    result = sim(FrameStream(det.video), det.scheduler)
+    synced = SequenceSynchronizer().order(result)
+    assert [s.index for s in synced] == list(range(result.n_frames))
+    processed = set(result.processed_indices)
+    for s in synced:
+        if s.index in processed:
+            assert not s.stale and s.source_index == s.index
+        elif s.source_index >= 0:
+            assert s.stale and s.source_index < s.index
+            assert s.source_index in processed
+
+
+def test_no_drops_when_capacity_exceeds_lambda():
+    det = run(devices=["ncs2"] * 7)             # 17.5 FPS > 14 FPS
+    from repro.core.simulator import simulate as sim
+    result = sim(FrameStream(det.video), det.scheduler)
+    assert result.drop_rate < 0.02
+
+
+# ------------------------------------------------------------------ mAP
+def test_map_recovers_with_parallelism():
+    maps = []
+    for n in (1, 3, 6):
+        maps.append(run(devices=["ncs2"] * n).run().map_score)
+    assert maps[0] < maps[1] <= maps[2] + 0.01
+    off = run(devices=["ncs2"]).run(offline=True).map_score
+    assert maps[2] == pytest.approx(off, abs=0.02)
+
+
+def test_offline_reference_map_matches_paper_band():
+    off = run(devices=["ncs2"]).run(offline=True).map_score
+    assert 0.82 <= off <= 0.91                  # paper: 86.9% (YOLO, ETH)
+    off_ssd = run(model="ssd300", devices=["ncs2"]).run(offline=True).map_score
+    assert off_ssd < off                        # SSD below YOLO, as in paper
+
+
+# ------------------------------------------------------- property tests
+@settings(max_examples=25, deadline=None)
+@given(lam=st.floats(5.0, 60.0), mu=st.floats(0.3, 40.0))
+def test_n_range_properties(lam, mu):
+    lo, hi = n_range(lam, mu)
+    assert 1 <= lo <= hi
+    assert hi * mu >= lam                       # conservative end covers λ
+    if lam > 12:
+        assert lo * mu >= min(10.0, lam) - mu   # near-real-time end
+
+
+@settings(max_examples=10, deadline=None)
+@given(n=st.integers(1, 6), sched=st.sampled_from(["rr", "fcfs", "wrr"]),
+       fps=st.floats(5.0, 40.0))
+def test_simulation_invariants(n, sched, fps):
+    video = SyntheticVideo(VideoSpec("t", fps, 120, 320, 240, False, 4, 1))
+    execs = [DetectorExecutor(DEVICE_PROFILES["ncs2"],
+                              MODEL_PROFILES["yolov3"]) for _ in range(n)]
+    result = simulate(FrameStream(video), make_scheduler(sched, execs))
+    # conservation: every frame either processed once or dropped once
+    assert len(result.assignments) + len(result.dropped) == 120
+    assert len(set(result.processed_indices) & set(result.dropped)) == 0
+    # causality + no overlap per executor
+    per_ex = {}
+    for a in result.assignments:
+        assert a.t_done > a.t_start >= 0
+        assert a.t_start >= a.frame_idx / fps - 1e-9    # not before arrival
+        per_ex.setdefault(a.executor_idx, []).append(a)
+    for aas in per_ex.values():
+        aas.sort(key=lambda a: a.t_start)
+        for x, y in zip(aas, aas[1:]):
+            assert y.t_start >= x.t_done - 1e-9
+
+
+# ----------------------------------------- heterogeneous detection models
+def test_heterogeneous_models_per_device():
+    """Paper §III-A third design alternative: different detector models on
+    different devices; FCFS exploits both, mAP scored per source model."""
+    hetero = run(model=["yolov3"] + ["ssd300"] * 4,
+                 devices=["fast_cpu"] + ["ncs2"] * 4).run()
+    ssd_only = run(model="ssd300", devices=["ncs2"] * 4).run()
+    assert hetero.model == "mixed"
+    assert hetero.sigma > ssd_only.sigma + 5.0     # fast CPU adds ~13.5
+    assert hetero.map_score > ssd_only.map_score   # YOLO share lifts mAP

@@ -1,0 +1,65 @@
+"""Guard the dry-run deliverable: every (arch x shape x mesh) artifact
+exists, compiled without error (or is a documented skip), and feeds the
+roofline.  (The artifacts are produced by `python -m repro.launch.dryrun
+--arch all --shape all --mesh both`, which needs its own process because
+it pins 512 host devices before jax init.)"""
+import json
+from pathlib import Path
+
+import pytest
+
+from repro.configs import ARCH_IDS, SHAPES
+
+DRYRUN = Path(__file__).resolve().parents[1] / "experiments" / "dryrun"
+
+pytestmark = pytest.mark.skipif(
+    not DRYRUN.exists() or not list(DRYRUN.glob("*.json")),
+    reason="dry-run artifacts not generated (run repro.launch.dryrun)")
+
+
+def _load(arch, shape, mesh):
+    f = DRYRUN / f"{arch}__{shape}__{mesh}.json"
+    assert f.exists(), f"missing artifact {f.name}"
+    return json.loads(f.read_text())
+
+
+@pytest.mark.parametrize("mesh", ["single", "multi"])
+@pytest.mark.parametrize("shape", list(SHAPES))
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_pair_compiled_or_documented_skip(arch, shape, mesh):
+    d = _load(arch, shape, mesh)
+    assert "error" not in d, d.get("error")
+    if d.get("skipped"):
+        assert arch == "hubert-xlarge" and shape in ("decode_32k",
+                                                     "long_500k")
+        return
+    assert d["memory"]["argument_size_in_bytes"] > 0
+    assert d["hlo_cost"]["flops"] > 0
+    assert d["collectives"]["unknown_trip_counts"] == 0
+    mesh_size = 1
+    for v in d["mesh"].values():
+        mesh_size *= v
+    assert mesh_size == (512 if mesh == "multi" else 256)
+
+
+def test_roofline_covers_all_compiled_pairs():
+    import sys
+    sys.path.insert(0, str(DRYRUN.parents[1]))
+    from benchmarks import roofline
+    rows = roofline.table("single")
+    # 10 archs x 4 shapes - 2 hubert decode skips = 38
+    assert len(rows) == 38
+    for r in rows:
+        assert r["dominant"] in ("compute", "memory", "collective")
+        assert r["compute_s"] >= 0 and r["memory_s"] > 0
+        assert 0 <= r["useful_ratio"] < 50
+
+
+def test_multi_pod_shards_the_pod_axis():
+    """Multi-pod per-device argument bytes must be at most ~single-pod
+    (the pod axis halves the per-device footprint for sharded inputs)."""
+    for arch in ("minicpm-2b", "grok-1-314b"):
+        s = _load(arch, "train_4k", "single")["memory"]
+        m = _load(arch, "train_4k", "multi")["memory"]
+        assert m["argument_size_in_bytes"] <= s["argument_size_in_bytes"] \
+            * 0.75

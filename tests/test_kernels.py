@@ -1,0 +1,145 @@
+"""Per-kernel validation: Pallas (interpret mode on CPU) vs pure-jnp
+oracle, swept over shapes and dtypes."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from repro.kernels import ref
+from repro.kernels.decode_attention import decode_attention
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.iou import iou_matrix
+from repro.kernels.ops import nms
+
+TOL = {jnp.float32: dict(rtol=2e-5, atol=2e-5),
+       jnp.bfloat16: dict(rtol=2e-2, atol=2e-2)}
+
+
+def rand(key, shape, dtype):
+    return jax.random.normal(key, shape, jnp.float32).astype(dtype)
+
+
+# ------------------------------------------------------- flash attention
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,H,T,S,D", [
+    (1, 2, 128, 128, 64),
+    (2, 4, 256, 256, 64),
+    (1, 1, 128, 256, 128),     # cross: S > T (cached prefix)
+    (2, 2, 256, 128, 32),      # T > S
+])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_attention_matches_ref(B, H, T, S, D, dtype, causal):
+    if causal and S < T:
+        pytest.skip("causal with S<T is not a served configuration")
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q, k, v = (rand(ks[0], (B, H, T, D), dtype),
+               rand(ks[1], (B, H, S, D), dtype),
+               rand(ks[2], (B, H, S, D), dtype))
+    got = flash_attention(q, k, v, causal=causal, interpret=True,
+                          block_q=128, block_k=128)
+    want = ref.flash_attention_ref(q, k, v, causal=causal)
+    assert_allclose(np.asarray(got, np.float32),
+                    np.asarray(want, np.float32), **TOL[dtype])
+
+
+def test_flash_attention_block_shape_sweep():
+    B, H, T, D = 1, 2, 512, 64
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    q, k, v = (rand(ks[0], (B, H, T, D), jnp.float32),
+               rand(ks[1], (B, H, T, D), jnp.float32),
+               rand(ks[2], (B, H, T, D), jnp.float32))
+    want = ref.flash_attention_ref(q, k, v, causal=True)
+    for bq, bk in [(128, 128), (256, 128), (128, 256), (256, 256)]:
+        got = flash_attention(q, k, v, causal=True, interpret=True,
+                              block_q=bq, block_k=bk)
+        assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5,
+                        atol=2e-5)
+
+
+# ------------------------------------------------------- decode attention
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,H,KV,S,D", [
+    (1, 8, 2, 512, 64),
+    (2, 16, 16, 1024, 64),     # MHA (KV == H)
+    (2, 8, 1, 512, 128),       # MQA
+    (4, 32, 8, 2048, 128),     # the decode_32k family shape
+])
+def test_decode_attention_matches_ref(B, H, KV, S, D, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(2), 3)
+    q = rand(ks[0], (B, H, D), dtype)
+    k = rand(ks[1], (B, S, KV, D), dtype)
+    v = rand(ks[2], (B, S, KV, D), dtype)
+    got = decode_attention(q, k, v, interpret=True, block_s=256)
+    want = ref.decode_attention_ref(q, k, v)
+    assert_allclose(np.asarray(got, np.float32),
+                    np.asarray(want, np.float32), **TOL[dtype])
+
+
+# --------------------------------------------------------------- IoU/NMS
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(1, 300), m=st.integers(1, 300),
+       seed=st.integers(0, 99))
+def test_iou_matrix_matches_ref(n, m, seed):
+    rng = np.random.default_rng(seed)
+    def boxes(k):
+        tl = rng.uniform(0, 100, (k, 2))
+        wh = rng.uniform(1, 50, (k, 2))
+        return jnp.asarray(np.concatenate([tl, tl + wh], -1), jnp.float32)
+    a, b = boxes(n), boxes(m)
+    got = iou_matrix(a, b, interpret=True)
+    want = ref.iou_matrix_ref(a, b)
+    assert got.shape == (n, m)
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-6)
+    assert float(jnp.max(got)) <= 1.0 + 1e-5
+    assert float(jnp.min(got)) >= 0.0
+
+
+def test_iou_diagonal_is_one():
+    rng = np.random.default_rng(0)
+    tl = rng.uniform(0, 100, (64, 2))
+    wh = rng.uniform(1, 50, (64, 2))
+    a = jnp.asarray(np.concatenate([tl, tl + wh], -1), jnp.float32)
+    got = iou_matrix(a, a, interpret=True)
+    assert_allclose(np.asarray(jnp.diag(got)), np.ones(64), rtol=1e-5)
+
+
+def test_nms_suppresses_overlaps():
+    boxes = jnp.asarray([[0, 0, 10, 10], [1, 1, 11, 11], [50, 50, 60, 60]],
+                        jnp.float32)
+    scores = jnp.asarray([0.9, 0.8, 0.7])
+    keep, valid = nms(boxes, scores, iou_thr=0.5, max_out=3)
+    kept = set(np.asarray(keep)[np.asarray(valid)].tolist())
+    assert kept == {0, 2}
+    # matches the oracle
+    keep_r, valid_r = ref.nms_ref(boxes, scores, 0.5, 3)
+    assert np.array_equal(np.asarray(keep)[np.asarray(valid)],
+                          np.asarray(keep_r)[np.asarray(valid_r)])
+
+
+# ------------------------------------------------------------ rwkv scan
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,H,T,hs,chunk", [
+    (1, 2, 256, 32, 256),
+    (2, 3, 512, 64, 256),      # multi-chunk: scratch persists across grid
+    (1, 1, 1024, 64, 128),
+])
+def test_rwkv_scan_matches_ref(B, H, T, hs, chunk, dtype):
+    from repro.kernels.rwkv_scan import rwkv_scan
+    ks = jax.random.split(jax.random.PRNGKey(3), 6)
+    r = rand(ks[0], (B, H, T, hs), dtype)
+    k = rand(ks[1], (B, H, T, hs), dtype)
+    v = rand(ks[2], (B, H, T, hs), dtype)
+    w = (jax.nn.sigmoid(rand(ks[3], (B, H, T, hs), jnp.float32)) * 0.5
+         + 0.45).astype(dtype)
+    u = rand(ks[4], (H, hs), jnp.float32)
+    s0 = jax.random.normal(ks[5], (B, H, hs, hs), jnp.float32) * 0.1
+    got_o, got_s = rwkv_scan(r, k, v, w, u, s0, interpret=True,
+                             chunk_t=chunk)
+    want_o, want_s = ref.rwkv_scan_ref(r, k, v, w, u, s0)
+    tol = TOL[dtype]
+    assert_allclose(np.asarray(got_o, np.float32),
+                    np.asarray(want_o, np.float32), **tol)
+    assert_allclose(np.asarray(got_s), np.asarray(want_s),
+                    rtol=tol["rtol"] * 5, atol=tol["atol"] * 5)

@@ -1,0 +1,247 @@
+"""Model-substrate correctness: decode/train equivalence, MoE dispatch vs
+dense reference, ring-buffer positions, RoPE properties, sharding rules."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from repro.configs import ARCH_IDS, get_config
+from repro.models import init_cache, init_model, model_apply
+from repro.models.attention import _ring_positions
+from repro.models.config import ModelConfig, MoEConfig, dense_stages
+from repro.models.rope import apply_rope
+
+F32_ARCHS = [a for a in ARCH_IDS if a != "hubert-xlarge"]
+
+
+# ---------------------------------------------- decode == full-forward
+@pytest.mark.parametrize("arch", F32_ARCHS)
+def test_prefill_decode_matches_full_forward(arch):
+    """Prefill S tokens then decode token S must equal the full (S+1)-token
+    forward's last-position logits (cache correctness across every mixer
+    family: GQA, MLA, SWA, Mamba, RWKV6)."""
+    cfg = get_config(arch, preset="smoke")
+    if cfg.moe:
+        # capacity-dropping is sequence-global (prefill-length dependent);
+        # ample capacity isolates the cache-correctness property
+        import dataclasses
+        cfg = cfg.replace(moe=dataclasses.replace(cfg.moe,
+                                                  capacity_factor=16.0))
+    params = init_model(cfg, jax.random.PRNGKey(0))
+    B, S = 2, 48
+    rng = np.random.default_rng(0)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size - 1, (B, S + 1)),
+                       jnp.int32)
+    batch_in = {"tokens": toks}
+    if cfg.modality == "vlm":
+        n_img = 8
+        batch_in = {"tokens": toks[:, n_img:],
+                    "image_embeds": jnp.asarray(
+                        rng.standard_normal((B, n_img, cfg.frontend_dim)),
+                        jnp.float32)}
+    # full forward over S+1 tokens
+    logits_full, _, _ = model_apply(params, cfg, batch_in, mode="train")
+
+    # prefill S, then decode one token
+    pre_in = {"tokens": toks[:, :S]}
+    if cfg.modality == "vlm":
+        pre_in = {"tokens": batch_in["tokens"][:, :-1],
+                  "image_embeds": batch_in["image_embeds"]}
+    cache = init_cache(cfg, B, S + 8)
+    _, cache, _ = model_apply(params, cfg, pre_in, mode="prefill",
+                              cache=cache)
+    logits_dec, _, _ = model_apply(
+        params, cfg, {"tokens": toks[:, S:S + 1]}, mode="decode",
+        cache=cache, decode_pos=jnp.asarray(S, jnp.int32))
+
+    assert_allclose(np.asarray(logits_dec[:, 0]),
+                    np.asarray(logits_full[:, -1]), rtol=2e-4, atol=2e-4)
+
+
+def test_swa_decode_ring_buffer_matches_windowed_forward():
+    """Decoding past the window with the ring buffer == full forward with a
+    sliding-window mask (the long_500k mechanism)."""
+    cfg = get_config("mistral-nemo-12b", preset="smoke").replace(
+        decode_window=16)
+    params = init_model(cfg, jax.random.PRNGKey(0))
+    B, S = 1, 40
+    rng = np.random.default_rng(1)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size - 1, (B, S + 1)),
+                       jnp.int32)
+    # reference: full forward WITH window masks on every layer
+    import dataclasses
+    from repro.models.config import LayerSpec, Stage
+    win_stages = tuple(
+        Stage(tuple(dataclasses.replace(l, window=16) for l in s.pattern),
+              s.repeats) for s in cfg.stages)
+    cfg_win = cfg.replace(stages=win_stages)
+    logits_full, _, _ = model_apply(params, cfg_win,
+                                    {"tokens": toks}, mode="train")
+    # ring-buffer path: prefill S then decode (cache length = window 16)
+    cache = init_cache(cfg, B, S)
+    _, cache, _ = model_apply(params, cfg, {"tokens": toks[:, :S]},
+                              mode="prefill", cache=cache)
+    # stacked cache layout: (repeats, batch, window, kv, head_dim)
+    assert cache[0]["caches"][0]["mixer"]["k"].shape[2] == 16
+    logits_dec, _, _ = model_apply(params, cfg, {"tokens": toks[:, S:]},
+                                   mode="decode", cache=cache,
+                                   decode_pos=jnp.asarray(S, jnp.int32))
+    assert_allclose(np.asarray(logits_dec[:, 0]),
+                    np.asarray(logits_full[:, -1]), rtol=2e-4, atol=2e-4)
+
+
+# ----------------------------------------------------------- ring buffer
+@settings(max_examples=50, deadline=None)
+@given(L=st.integers(1, 64), n=st.integers(1, 300))
+def test_ring_positions_properties(L, n):
+    k_pos, valid = jax.jit(_ring_positions, static_argnums=0)(
+        L, jnp.asarray(n))
+    k_pos, valid = np.asarray(k_pos), np.asarray(valid)
+    for s in range(L):
+        # slot s holds the largest position p < n with p % L == s
+        cands = [p for p in range(max(0, n - L), n) if p % L == s]
+        if cands:
+            assert valid[s] and k_pos[s] == cands[-1]
+        else:
+            assert not valid[s]
+
+
+# ------------------------------------------------------------------ MoE
+def test_moe_matches_dense_per_token_reference():
+    """Sort-based capacity dispatch == naive per-token top-k loop when
+    capacity is ample."""
+    from repro.models import moe as moe_mod
+    cfg = ModelConfig(
+        name="t", d_model=32, d_ff=64, vocab_size=64,
+        stages=dense_stages(1, ffn="moe"), n_heads=2, n_kv_heads=2,
+        head_dim=16, moe=MoEConfig(n_experts=4, top_k=2, d_ff=64,
+                                   capacity_factor=8.0))
+    p = moe_mod.init_moe(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 8, 32))
+    out, aux = moe_mod.apply_moe(p, cfg, x)
+
+    # naive reference
+    xf = x.reshape(-1, 32)
+    logits = xf @ p["router"]["w"]
+    probs = jax.nn.softmax(logits, -1)
+    w, idx = jax.lax.top_k(probs, 2)
+    w = w / w.sum(-1, keepdims=True)
+    ref = jnp.zeros_like(xf)
+    for t in range(xf.shape[0]):
+        for j in range(2):
+            e = int(idx[t, j])
+            we = p["experts"]
+            h = jax.nn.silu(xf[t] @ we["w_gate"][e]) * (xf[t] @ we["w_up"][e])
+            ref = ref.at[t].add(w[t, j] * (h @ we["w_down"][e]))
+    assert_allclose(np.asarray(out.reshape(-1, 32)), np.asarray(ref),
+                    rtol=2e-4, atol=2e-5)
+    assert float(aux["load_balance"]) > 0.5   # ~1.0 for balanced routing
+
+
+def test_moe_capacity_drops_overflow_tokens():
+    from repro.models import moe as moe_mod
+    cfg = ModelConfig(
+        name="t", d_model=16, d_ff=32, vocab_size=64,
+        stages=dense_stages(1, ffn="moe"), n_heads=2, n_kv_heads=2,
+        head_dim=8, moe=MoEConfig(n_experts=2, top_k=1, d_ff=32,
+                                  capacity_factor=0.25))
+    p = moe_mod.init_moe(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 64, 16))
+    out, _ = moe_mod.apply_moe(p, cfg, x)
+    # some tokens must be dropped (zero contribution)
+    norms = jnp.linalg.norm(out[0], axis=-1)
+    assert int(jnp.sum(norms == 0.0)) > 0
+
+
+# ------------------------------------------------------------------ RoPE
+@settings(max_examples=20, deadline=None)
+@given(shift=st.integers(0, 64))
+def test_rope_relative_property(shift):
+    """<rope(q,p1), rope(k,p2)> depends only on p1-p2 (full variant)."""
+    key = jax.random.PRNGKey(0)
+    q = jax.random.normal(key, (1, 1, 1, 64))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (1, 1, 1, 64))
+    def dot_at(p1, p2):
+        qr = apply_rope(q, jnp.array([[p1]]), 1e4, "full")
+        kr = apply_rope(k, jnp.array([[p2]]), 1e4, "full")
+        return float(jnp.sum(qr * kr))
+    assert dot_at(5, 3) == pytest.approx(dot_at(5 + shift, 3 + shift),
+                                         rel=1e-4, abs=1e-4)
+
+
+# ------------------------------------------------------------- sharding
+def test_param_sharding_rules_divisibility():
+    """Every resolved spec must divide the dim it shards (all archs, both
+    production meshes)."""
+    from repro.sharding.rules import param_specs
+    import jax.sharding as jsh
+    devs = np.array(jax.devices()[:1]).reshape(1, 1, 1)
+    for axes in (("data", "model"), ("pod", "data", "model")):
+        sizes = {"pod": 2, "data": 16, "model": 16}
+        mesh_devs = np.empty([sizes[a] for a in axes], object)
+        mesh = jsh.Mesh(
+            np.tile(np.array(jax.devices()[:1]),
+                    int(np.prod([sizes[a] for a in axes]))).reshape(
+                [sizes[a] for a in axes]), axes)
+        for arch in ARCH_IDS:
+            cfg = get_config(arch, "full")
+            struct = jax.eval_shape(
+                lambda k, c=cfg: init_model(c, k),
+                jax.ShapeDtypeStruct((2,), jnp.uint32))
+            specs = param_specs(struct, mesh)
+            flat = jax.tree_util.tree_flatten_with_path(
+                (struct, specs))[0]
+            leaves = jax.tree.leaves(struct)
+            spec_leaves = jax.tree.leaves(
+                specs, is_leaf=lambda x: isinstance(x, jsh.PartitionSpec))
+            assert len(leaves) == len(spec_leaves)
+            for leaf, spec in zip(leaves, spec_leaves):
+                for dim, entry in zip(leaf.shape, tuple(spec)):
+                    if entry is None:
+                        continue
+                    axs = entry if isinstance(entry, tuple) else (entry,)
+                    total = int(np.prod([mesh.shape[a] for a in axs]))
+                    assert dim % total == 0, (arch, leaf.shape, spec)
+
+
+# ------------------------------------------------------------ checkpoint
+def test_checkpoint_roundtrip(tmp_path):
+    from repro.optim import AdamWConfig
+    from repro.runtime import train_state_init
+    from repro.runtime.checkpoint import (checkpoint_step,
+                                          restore_checkpoint,
+                                          save_checkpoint)
+    cfg = get_config("qwen3-4b", preset="smoke")
+    state = train_state_init(cfg, jax.random.PRNGKey(0), AdamWConfig())
+    path = tmp_path / "ckpt"
+    save_checkpoint(path, state, step=7)
+    assert checkpoint_step(path) == 7
+    restored = restore_checkpoint(path, state)
+    for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(restored)):
+        assert_allclose(np.asarray(a), np.asarray(b))
+
+
+# ------------------------------------------- chunked == naive attention
+@settings(max_examples=8, deadline=None)
+@given(kv=st.sampled_from([1, 2, 4, 8]), window=st.sampled_from([None, 1500]))
+def test_chunked_attention_matches_naive(kv, window):
+    """The flash-style chunked online-softmax path (used for train/prefill
+    at production lengths) must equal the naive masked softmax."""
+    from repro.models.attention import _sdpa_chunked, make_mask, sdpa
+    B, T, H, D = 1, 1024, 8, 32
+    ks = jax.random.split(jax.random.PRNGKey(7), 3)
+    q = jax.random.normal(ks[0], (B, T, H, D))
+    k = jax.random.normal(ks[1], (B, T, kv, D))
+    v = jax.random.normal(ks[2], (B, T, kv, D))
+    pos = jnp.broadcast_to(jnp.arange(T), (B, T))
+    import repro.models.attention as A
+    oq, ok_ = A.Q_CHUNK, A.K_CHUNK
+    A.Q_CHUNK, A.K_CHUNK = 256, 256
+    try:
+        got = _sdpa_chunked(q, k, v, pos, pos, True, window, D ** -0.5)
+    finally:
+        A.Q_CHUNK, A.K_CHUNK = oq, ok_
+    want = sdpa(q, k, v, make_mask(pos, pos, True, window), D ** -0.5)
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-5)
