@@ -8,7 +8,7 @@ from .scheduler import (FCFSScheduler, LockstepRRScheduler,
 from .simulator import SimResult, simulate
 from .synchronizer import SequenceSynchronizer, SyncedFrame
 from .parallel import ParallelDetector, choose_n, n_range
-from .quality import ProxyDetector, evaluate_map
+from .quality import ProxyDetector, evaluate_map, evaluate_map_loop
 
 __all__ = [
     "BENCHMARK_VIDEOS", "ADL_RUNDLE_6", "ETH_SUNNYDAY", "Frame",
@@ -17,5 +17,5 @@ __all__ = [
     "FCFSScheduler", "LockstepRRScheduler", "ProportionalScheduler",
     "WeightedRRScheduler", "make_scheduler", "SimResult", "simulate",
     "SequenceSynchronizer", "SyncedFrame", "ParallelDetector", "choose_n",
-    "n_range", "ProxyDetector", "evaluate_map",
+    "n_range", "ProxyDetector", "evaluate_map", "evaluate_map_loop",
 ]

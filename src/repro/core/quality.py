@@ -9,11 +9,16 @@ noisier than YOLOv3, matching the paper's mAP ordering).  The mAP math
 paper's central quality effect is mechanical: dropped frames reuse stale
 detections, object motion decays their IoU against the current frame, and
 mAP falls exactly as in Tables IV/V.
+
+``evaluate_map`` is the vectorized scorer (batched GT fetch, per-source
+class partitioning, argmax-based greedy matcher); ``evaluate_map_loop``
+keeps the seed's Python-loop implementation as the equality oracle.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
 from typing import Dict, List, Sequence
+from zlib import crc32
 
 import numpy as np
 
@@ -46,10 +51,26 @@ class ProxyDetector:
         self.diff = DIFFICULTY.get(video_name, 1.0)
         self.model = model
         self.seed = seed
+        self._memo: Dict[int, Detections] = {}
+        self._memo_video: SyntheticVideo | None = None
 
     def detect(self, video: SyntheticVideo, frame_idx: int) -> Detections:
+        # detection is a pure function of (model, seed, video, frame):
+        # memoize so repeated evaluations (offline + paced runs,
+        # benchmark sweeps) pay the noise synthesis once per frame; the
+        # cache resets when a different video object comes through
+        if video is not self._memo_video:
+            self._memo = {}
+            self._memo_video = video
+        hit = self._memo.get(frame_idx)
+        if hit is not None:
+            return hit
+        # crc32, not hash(): string hashing is randomized per process
+        # (PYTHONHASHSEED), which made mAP values — and the paper-band
+        # tests — flap from run to run
         rng = np.random.default_rng(
-            (hash((self.model, self.seed)) & 0xFFFF) * 100003 + frame_idx)
+            (crc32(f"{self.model}/{self.seed}".encode()) & 0xFFFF)
+            * 100003 + frame_idx)
         gt = video.boxes_at(frame_idx)
         classes = video.classes
         n = self.noise
@@ -78,7 +99,9 @@ class ProxyDetector:
         boxes = np.concatenate([boxes, fp_boxes], 0)
         cls = np.concatenate([cls, rng.integers(0, video.N_CLASSES, n_fp)])
         scores = np.concatenate([scores, rng.uniform(0.1, 0.65, n_fp)])
-        return Detections(boxes, cls, scores)
+        det = Detections(boxes, cls, scores)
+        self._memo[frame_idx] = det
+        return det
 
 
 def iou_matrix(a: np.ndarray, b: np.ndarray) -> np.ndarray:
@@ -103,24 +126,121 @@ def average_precision(tp: np.ndarray, scores: np.ndarray,
     cum_tp = np.cumsum(tp)
     recall = cum_tp / n_gt
     precision = cum_tp / (np.arange(len(tp)) + 1)
-    # all-point interpolation
+    # all-point interpolation (running max from the right, vectorized)
     mrec = np.concatenate([[0.0], recall, [1.0]])
     mpre = np.concatenate([[1.0], precision, [0.0]])
-    for i in range(len(mpre) - 2, -1, -1):
-        mpre[i] = max(mpre[i], mpre[i + 1])
+    mpre = np.maximum.accumulate(mpre[::-1])[::-1]
     idx = np.where(mrec[1:] != mrec[:-1])[0]
     return float(np.sum((mrec[idx + 1] - mrec[idx]) * mpre[idx + 1]))
+
+
+def _batched_iou(a: np.ndarray, b: np.ndarray) -> np.ndarray:
+    """a (F, D, 4) x b (F, K, 4) -> (F, D, K) IoU."""
+    tl = np.maximum(a[:, :, None, :2], b[:, None, :, :2])
+    br = np.minimum(a[:, :, None, 2:], b[:, None, :, 2:])
+    inter = np.prod(np.clip(br - tl, 0, None), -1)
+    aa = np.prod(a[:, :, 2:] - a[:, :, :2], -1)
+    ab = np.prod(b[:, :, 2:] - b[:, :, :2], -1)
+    return inter / np.maximum(aa[:, :, None] + ab[:, None, :] - inter, 1e-9)
 
 
 def evaluate_map(video: SyntheticVideo, synced: Sequence[SyncedFrame],
                  detector: ProxyDetector, iou_thr: float = 0.5,
                  det_by_frame: Dict[int, ProxyDetector] | None = None
                  ) -> float:
-    """mAP over all frames of the output stream: processed frames score
-    their own detections; dropped frames score the stale reused detections
-    against the *current* frame's ground truth.  ``det_by_frame`` scores
-    each processed frame with the model that ran it (heterogeneous-model
-    deployments)."""
+    """Vectorized mAP over all frames of the output stream (identical
+    result to ``evaluate_map_loop``, the seed implementation kept below
+    as the oracle): processed frames score their own detections; dropped
+    frames score the stale reused detections against the *current*
+    frame's ground truth.  ``det_by_frame`` scores each processed frame
+    with the model that ran it (heterogeneous-model deployments).
+
+    Vectorization: detections per unique source frame are synthesized and
+    class-partitioned once; ground truth for every output frame comes
+    from one batched ``boxes_at_many`` call; and the per-frame/per-class
+    Python greedy-matching loops collapse into ONE batched matcher per
+    class over all frames at once.  The seed walked detections in score
+    order and matched each against the *single* best-IoU ground-truth box
+    (a second-best box never rescues a detection whose best box is
+    taken), so the match rule is separable: a detection is TP iff its
+    best-IoU box clears the threshold AND no earlier (higher-score)
+    detection in the same frame claimed the same box — one argmax plus a
+    triangular first-claim mask, batched over frames.
+    """
+    C = video.N_CLASSES
+    gt_cls = video.classes
+    cls_masks = [gt_cls == c for c in range(C)]
+    n_gt = {c: len(synced) * int(np.sum(m))
+            for c, m in enumerate(cls_masks)}
+
+    # detections per unique source frame, class-partitioned + score-sorted
+    # once (the same (D, 4) arrays serve every output frame that reuses
+    # this source, stale or fresh)
+    det_cache: Dict[int, List[tuple]] = {}
+    scored = [sf for sf in synced if sf.source_index >= 0]
+    sources = []
+    for sf in scored:
+        if sf.source_index in det_cache:
+            continue
+        det = (det_by_frame or {}).get(sf.source_index, detector)
+        d = det.detect(video, sf.source_index)
+        by_class = []
+        for c in range(C):
+            db = d.boxes[d.classes == c]
+            ds = d.scores[d.classes == c]
+            order = np.argsort(-ds)
+            by_class.append((db[order], ds[order]))
+        det_cache[sf.source_index] = by_class
+        sources.append(sf.source_index)
+    src_row = {s: i for i, s in enumerate(sources)}
+    frame_src = np.array([src_row[sf.source_index] for sf in scored])
+
+    all_gt = video.boxes_at_many(np.array([sf.index for sf in scored],
+                                          np.int64))   # (F, K, 4)
+
+    aps = []
+    for c in range(C):
+        if n_gt[c] == 0:
+            continue
+        K = int(np.sum(cls_masks[c]))
+        per_src = [det_cache[s][c] for s in sources]
+        d_max = max((len(db) for db, _ in per_src), default=0)
+        if d_max == 0 or K == 0:
+            aps.append(average_precision(np.zeros(0), np.zeros(0),
+                                         n_gt[c]))
+            continue
+        # pad per-source detections to (S, Dmax)
+        S = len(per_src)
+        sb = np.zeros((S, d_max, 4))
+        ss = np.full((S, d_max), -np.inf)
+        for i, (db, ds) in enumerate(per_src):
+            sb[i, :len(db)] = db
+            ss[i, :len(ds)] = ds
+        fb = sb[frame_src]                     # (F, Dmax, 4)
+        fs = ss[frame_src]                     # (F, Dmax)
+        real = np.isfinite(fs)
+        ious = _batched_iou(fb, all_gt[:, cls_masks[c]])   # (F, Dmax, K)
+        jb = np.argmax(ious, -1)               # best gt per detection
+        best = np.take_along_axis(ious, jb[..., None], -1)[..., 0]
+        ok = (best >= iou_thr) & real
+        # first claim wins: det i is blocked if an earlier (higher-score)
+        # qualified det j < i targets the same gt box
+        same = jb[:, :, None] == jb[:, None, :]            # (F, i, j)
+        earlier = np.tril(np.ones((d_max, d_max), bool), -1)
+        blocked = np.any(same & ok[:, None, :] & earlier[None], -1)
+        tp = (ok & ~blocked).astype(float)
+        aps.append(average_precision(tp[real], fs[real], n_gt[c]))
+    return float(np.mean(aps)) if aps else 0.0
+
+
+def evaluate_map_loop(video: SyntheticVideo, synced: Sequence[SyncedFrame],
+                      detector: ProxyDetector, iou_thr: float = 0.5,
+                      det_by_frame: Dict[int, ProxyDetector] | None = None
+                      ) -> float:
+    """The seed's per-frame/per-class/per-detection Python-loop mAP —
+    kept verbatim as the oracle for ``evaluate_map`` (tests assert
+    equality; ``benchmarks/nms_bench.py`` times the two against each
+    other)."""
     det_cache: Dict[int, Detections] = {}
     per_class_tp: Dict[int, List[float]] = {c: [] for c in
                                             range(video.N_CLASSES)}

@@ -53,8 +53,11 @@ class _Base:
     def n(self):
         return len(self.executors)
 
-    def _dispatch(self, ex: DetectorExecutor, frame_idx: int,
+    def _dispatch(self, ex_idx: int, frame_idx: int,
                   t: float) -> Assignment:
+        # executor identified by index — callers pick executors by index,
+        # so dispatch is O(1) instead of an O(n) ``executors.index`` scan
+        ex = self.executors[ex_idx]
         # host dispatch is serialized (GIL / thread-pool handoff)
         t = max(t, self.host_free_at)
         self.host_free_at = t + self.host_overhead
@@ -63,8 +66,7 @@ class _Base:
         t_done = t_start + service
         ex.busy_until = t_done
         ex.record(service)
-        return Assignment(frame_idx, self.executors.index(ex), t_start,
-                          t_done)
+        return Assignment(frame_idx, ex_idx, t_start, t_done)
 
     def assign(self, frame_idx: int, t: float) -> Optional[Assignment]:
         raise NotImplementedError
@@ -73,8 +75,9 @@ class _Base:
         """Zero-drop dispatch: the frame waits (buffered) until this
         scheduler's policy can take it (no earlier than arrival ``t``).
         FCFS default: first executor to free up."""
-        ex = min(self.executors, key=lambda e: e.busy_until)
-        return self._dispatch(ex, frame_idx, max(ex.busy_until, t))
+        j = min(range(self.n), key=lambda i: self.executors[i].busy_until)
+        return self._dispatch(j, frame_idx,
+                              max(self.executors[j].busy_until, t))
 
 
 class FCFSScheduler(_Base):
@@ -85,15 +88,17 @@ class FCFSScheduler(_Base):
         # first available executor; while all are busy, any executor with a
         # free single queued-frame slot (the frame being transferred while
         # the previous one computes) keeps the pipeline work-conserving
-        free = [e for e in self.executors if e.busy_until <= t]
+        free = [i for i, e in enumerate(self.executors) if e.busy_until <= t]
         if free:
-            return self._dispatch(min(free, key=lambda e: e.busy_until),
-                                  frame_idx, t)
-        open_q = [e for e in self.executors
+            return self._dispatch(
+                min(free, key=lambda i: self.executors[i].busy_until),
+                frame_idx, t)
+        open_q = [i for i, e in enumerate(self.executors)
                   if e.busy_until - t <= 1.0 / e.mu_effective]
         if open_q:
-            return self._dispatch(min(open_q, key=lambda e: e.busy_until),
-                                  frame_idx, t)
+            return self._dispatch(
+                min(open_q, key=lambda i: self.executors[i].busy_until),
+                frame_idx, t)
         return None
 
 
@@ -112,7 +117,7 @@ class LockstepRRScheduler(_Base):
         t_eff = max(t, self.round_barrier)
         if ex.busy_until > t:
             return None                      # slot still busy -> drop
-        a = self._dispatch(ex, frame_idx, t_eff)
+        a = self._dispatch(self.rr_idx, frame_idx, t_eff)
         self.rr_idx = (self.rr_idx + 1) % self.n
         if self.rr_idx == 0:                 # round complete: set barrier
             self.round_barrier = max(e.busy_until for e in self.executors)
@@ -120,8 +125,8 @@ class LockstepRRScheduler(_Base):
 
     def blocking_assign(self, frame_idx, t: float = 0.0):
         ex = self.executors[self.rr_idx]
-        a = self._dispatch(ex, frame_idx, max(self.round_barrier,
-                                              ex.busy_until, t))
+        a = self._dispatch(self.rr_idx, frame_idx, max(self.round_barrier,
+                                                       ex.busy_until, t))
         self.rr_idx = (self.rr_idx + 1) % self.n
         if self.rr_idx == 0:
             self.round_barrier = max(e.busy_until for e in self.executors)
@@ -147,27 +152,48 @@ class WeightedRRScheduler(_Base):
         # smooth (interleaved) weighted round-robin: spreading each
         # executor's slots avoids head-of-line blocking in the strict-order
         # dispatcher (a run of consecutive slots on a busy device would
-        # stall dispatch for every executor behind it)
-        slots = []
-        for j, w in enumerate(self.weights):
-            slots += [((k + 0.5) / int(w), j) for k in range(int(w))]
-        return [j for _, j in sorted(slots)]
+        # stall dispatch for every executor behind it).  Executor j's k-th
+        # slot sits at fractional round position (k + phase_j) / w_j;
+        # same-weight executors get distinct sub-phases, which fixes the
+        # old expansion's weight-1 clump (every weight-1 executor landed on
+        # the same 0.5 key, so [4,1,1,1,1] expanded to the head-of-line
+        # block [0,0,1,2,3,4,0,0] instead of [0,1,0,2,0,3,0,4]).
+        w = [int(x) for x in self.weights]
+        group = {wj: [j for j, x in enumerate(w) if x == wj]
+                 for wj in set(w)}
+        keyed = []
+        for j, wj in enumerate(w):
+            phase = (group[wj].index(j) + 0.5) / len(group[wj])
+            keyed += [((k + phase) / wj, j) for k in range(wj)]
+        slots = [j for _, j in sorted(keyed, key=lambda x: x[0])]
+        # rotate the (cyclic, rotation-invariant) sequence so the round
+        # opens with a lighter executor: the blocking dispatcher waits for
+        # each slot's device in strict order, so lighter (slower) devices
+        # dispatched first overlap their long service with the heavy
+        # device's burst instead of queueing behind it
+        wmax = max(w)
+        if min(w) < wmax:
+            start = next(i for i, j in enumerate(slots) if w[j] < wmax)
+            slots = slots[start:] + slots[:start]
+        return slots
 
     def assign(self, frame_idx, t):
-        ex = self.executors[self._slots[self.slot_idx]]
+        j = self._slots[self.slot_idx]
+        ex = self.executors[j]
         t_eff = max(t, self.round_barrier)
         if ex.busy_until > t + 1.0 / ex.mu_effective:
             return None                      # slot backlog -> drop
-        a = self._dispatch(ex, frame_idx, t_eff)
+        a = self._dispatch(j, frame_idx, t_eff)
         self.slot_idx = (self.slot_idx + 1) % len(self._slots)
         if self.slot_idx == 0:
             self.round_barrier = max(e.busy_until for e in self.executors)
         return a
 
     def blocking_assign(self, frame_idx, t: float = 0.0):
-        ex = self.executors[self._slots[self.slot_idx]]
-        a = self._dispatch(ex, frame_idx, max(self.round_barrier,
-                                              ex.busy_until, t))
+        j = self._slots[self.slot_idx]
+        ex = self.executors[j]
+        a = self._dispatch(j, frame_idx, max(self.round_barrier,
+                                             ex.busy_until, t))
         self.slot_idx = (self.slot_idx + 1) % len(self._slots)
         if self.slot_idx == 0:
             self.round_barrier = max(e.busy_until for e in self.executors)

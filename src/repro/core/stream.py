@@ -78,6 +78,17 @@ class SyntheticVideo:
         half = self.sizes / 2
         return np.concatenate([centers - half, centers + half], -1)
 
+    def boxes_at_many(self, frame_idx: np.ndarray) -> np.ndarray:
+        """Ground truth for many frames at once: (F,) indices ->
+        (F, K, 4) xyxy.  Same math as ``boxes_at`` with the frame axis
+        broadcast, so quality evaluation fetches all its GT in one call."""
+        idx = np.asarray(frame_idx, float)[:, None, None]
+        centers = self.pos0[None] + idx * (self.vel + self.cam_vel)[None]
+        span = np.array([self.spec.width, self.spec.height], float)
+        centers = np.abs(np.mod(centers, 2 * span) - span)
+        half = (self.sizes / 2)[None]
+        return np.concatenate([centers - half, centers + half], -1)
+
     def frame(self, i: int) -> Frame:
         return Frame(i, i / self.spec.fps, self.boxes_at(i), self.classes)
 

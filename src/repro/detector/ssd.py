@@ -4,7 +4,8 @@ offline, so examples train this on the synthetic benchmark video).
 
 Conv backbone (stride-2 blocks) -> two feature maps -> per-anchor box
 regression + objectness + class logits; decode + greedy NMS through the
-Pallas IoU kernel (repro.kernels).  Input: (B, 64, 64, 3).
+fused batched Pallas NMS kernel (repro.kernels.nms) — the whole
+micro-batch is suppressed in one launch.  Input: (B, 64, 64, 3).
 """
 from __future__ import annotations
 
@@ -139,8 +140,10 @@ def _iou(a, b):
 
 def decode_detections(p, cfg: SSDConfig, images, anchors, score_thr=0.4,
                       iou_thr=0.5, max_out=32, use_pallas=False):
-    """Full inference: forward + box decode + NMS (Pallas IoU kernel when
-    use_pallas=True).  Returns per-image (boxes, scores, classes, valid)."""
+    """Full inference: forward + box decode + fused batched NMS (one
+    suppression launch for the whole micro-batch; Pallas kernel when
+    use_pallas=True, its XLA twin otherwise).  Returns per-image
+    (boxes, scores, classes, valid)."""
     deltas, obj, cls_logits = ssd_forward(p, cfg, images)
     anc = jnp.asarray(anchors)
     anc_wh = anc[:, 2:] - anc[:, :2]
@@ -151,11 +154,15 @@ def decode_detections(p, cfg: SSDConfig, images, anchors, score_thr=0.4,
     scores = jax.nn.sigmoid(obj)
     classes = jnp.argmax(cls_logits, -1)
 
-    def per_image(bx, sc, cl):
-        sc = jnp.where(sc >= score_thr, sc, 0.0)
-        keep, valid = kops.nms(bx, sc, iou_thr=iou_thr, max_out=max_out,
-                               use_pallas=use_pallas)
-        valid &= sc[keep] > 0
-        return bx[keep], sc[keep], cl[keep], valid
-
-    return jax.vmap(per_image)(boxes, scores, classes)
+    # score-thresholding and suppression are fused into the batched NMS;
+    # stop_at_zero skips the zero-score tail, whose survivors the seed
+    # path enumerated only to mask them back out of ``valid``
+    keep, valid = kops.batched_nms(boxes, scores, iou_thr=iou_thr,
+                                   score_thr=score_thr, max_out=max_out,
+                                   stop_at_zero=True, use_pallas=use_pallas)
+    sc = jnp.where(scores >= score_thr, scores, 0.0)
+    bxk = jnp.take_along_axis(boxes, keep[..., None], axis=1)
+    sck = jnp.take_along_axis(sc, keep, axis=1)
+    clk = jnp.take_along_axis(classes, keep, axis=1)
+    valid = valid & (sck > 0)
+    return bxk, sck, clk, valid

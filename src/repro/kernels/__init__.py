@@ -1,7 +1,36 @@
+"""Pallas kernels for the detection fast path and the LLM substrate.
+
+Fast path
+---------
+The detection hot path is ``nms.batched_nms_pallas``: fused batched
+greedy NMS with a leading batch grid dimension (one program per frame,
+one launch per micro-batch).  Layout and tiling choices:
+
+* Boxes are carried transposed as (4, A) coordinate planes per frame —
+  the candidate index lands on the 128-wide lane dimension (the natural
+  (A, 4) layout would waste 124/128 lanes per vector op), mirroring
+  ``iou.py``.
+* Candidates are sorted by (thresholded) score once in the wrapper,
+  then suppressed in tiles of 32: each tile computes its IoU strip
+  against all later candidates on the fly in VMEM, so the full (A, A)
+  IoU matrix never exists in HBM.
+* Within a tile, greedy NMS is solved by a suppression *fixpoint*
+  (3-5 vectorized sweeps) instead of a serial per-box loop; the tile
+  loop exits early once ``max_out`` survivors exist.
+* Survivor -> output-slot assignment is an O(A) exclusive cumsum over
+  the alive mask — never a dense (A, A) triangular product, which
+  would put the quadratic operand back into VMEM.
+
+``nms.batched_nms_xla`` is the same algorithm as batched XLA ops and is
+the production path on hosts where Pallas runs interpreted;
+``ops.batched_nms`` dispatches between the two, and ``ref.nms_ref`` /
+``ref.batched_nms_ref`` remain the bit-compatibility oracles.
+"""
 from . import ops, ref
 from .decode_attention import decode_attention
 from .flash_attention import flash_attention
 from .iou import iou_matrix
+from .nms import batched_nms_pallas, batched_nms_xla
 
 __all__ = ["ops", "ref", "decode_attention", "flash_attention",
-           "iou_matrix"]
+           "iou_matrix", "batched_nms_pallas", "batched_nms_xla"]

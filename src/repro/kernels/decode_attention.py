@@ -25,12 +25,15 @@ def _decode_kernel(q_ref, k_ref, v_ref, o_ref, *, scale, seq_k, block_s):
     q = q_ref[0, 0].astype(jnp.float32) * scale          # (G, D)
     g, d = q.shape
 
+    k_all = k_ref[0, :, 0, :]                            # (S, D) in VMEM
+    v_all = v_ref[0, :, 0, :]
+
     def step(j, carry):
         m, l, acc = carry
-        k = pl.load(k_ref, (0, pl.ds(j * block_s, block_s), 0,
-                            slice(None))).astype(jnp.float32)   # (BS, D)
-        v = pl.load(v_ref, (0, pl.ds(j * block_s, block_s), 0,
-                            slice(None))).astype(jnp.float32)
+        k = jax.lax.dynamic_slice_in_dim(
+            k_all, j * block_s, block_s, 0).astype(jnp.float32)  # (BS, D)
+        v = jax.lax.dynamic_slice_in_dim(
+            v_all, j * block_s, block_s, 0).astype(jnp.float32)
         s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))  # (G, BS)
         m_new = jnp.maximum(m, jnp.max(s, axis=1))
         p = jnp.exp(s - m_new[:, None])

@@ -30,12 +30,15 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, *, scale, causal, seq_k,
     # the key sequence longer than the query block range
     q_pos = iq * bq + jax.lax.iota(jnp.int32, bq) + offset
 
+    k_all = k_ref[0, 0]                                  # (S, D) in VMEM
+    v_all = v_ref[0, 0]
+
     def kv_step(j, carry):
         m, l, acc = carry
-        k = pl.load(k_ref, (0, 0, pl.ds(j * block_k, block_k),
-                            slice(None))).astype(jnp.float32)  # (BK, D)
-        v = pl.load(v_ref, (0, 0, pl.ds(j * block_k, block_k),
-                            slice(None))).astype(jnp.float32)
+        k = jax.lax.dynamic_slice_in_dim(
+            k_all, j * block_k, block_k, 0).astype(jnp.float32)  # (BK, D)
+        v = jax.lax.dynamic_slice_in_dim(
+            v_all, j * block_k, block_k, 0).astype(jnp.float32)
         s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))  # (BQ, BK)
         k_pos = j * block_k + jax.lax.iota(jnp.int32, block_k)
         if causal:

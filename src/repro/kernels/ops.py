@@ -5,15 +5,27 @@ runs as traced JAX ops — numerics identical to TPU); on a TPU backend the
 same pallas_call compiles to Mosaic.  ``use_pallas=False`` falls back to
 the pure-jnp oracles in ref.py (the default inside model code, where XLA
 fusion already does well; benchmarks compare both paths).
+
+NMS is the one exception to the "False means oracle" rule: the fused
+batched NMS has an XLA twin of the *same* tiled algorithm
+(``nms.batched_nms_xla``) which is the production path on hosts where
+Pallas runs interpreted, so ``batched_nms(use_pallas=False)`` routes
+there.  The slow oracles stay available as ``ref.nms_ref`` /
+``ref.batched_nms_ref`` (tests assert bit-compatibility against them)
+and the seed's per-image serial path survives as ``nms_serial`` for
+benchmark baselines.
 """
 from __future__ import annotations
 
 import jax
+import jax.numpy as jnp
 
 from . import ref
 from .decode_attention import decode_attention as _decode_pallas
 from .flash_attention import flash_attention as _flash_pallas
 from .iou import iou_matrix as _iou_pallas
+from .nms import batched_nms_pallas as _nms_pallas
+from .nms import batched_nms_xla as _nms_xla
 
 
 def _interpret() -> bool:
@@ -39,10 +51,40 @@ def iou_matrix(a, b, *, use_pallas=True):
     return _iou_pallas(a, b, interpret=_interpret())
 
 
+def batched_nms(boxes, scores, *, iou_thr=0.5, score_thr=None, max_out=64,
+                tile=None, num_candidates=None, stop_at_zero=False,
+                use_pallas=True):
+    """Fused batched greedy NMS over a micro-batch of frames.
+
+    boxes (B, A, 4) xyxy, scores (B, A) -> (keep (B, max_out) int32,
+    valid (B, max_out) bool).  Exact (bit-compatible with
+    ``ref.batched_nms_ref``) when ``num_candidates`` covers all boxes and
+    ``stop_at_zero=False``; with ``score_thr`` + ``stop_at_zero=True``
+    the valid-masked outputs still match the seed decode path exactly —
+    zero-score survivors are simply not enumerated.
+    """
+    kw = dict(iou_thr=iou_thr, score_thr=score_thr, max_out=max_out,
+              num_candidates=num_candidates, stop_at_zero=stop_at_zero)
+    if tile is not None:
+        kw["tile"] = tile
+    if use_pallas:
+        return _nms_pallas(boxes, scores, interpret=_interpret(), **kw)
+    return _nms_xla(boxes, scores, **kw)
+
+
 def nms(boxes, scores, iou_thr=0.5, max_out=64, use_pallas=True):
-    """Greedy NMS: IoU matrix from the Pallas kernel + sequential suppress
-    loop (inherently serial; stays in jnp)."""
-    import jax.numpy as jnp
+    """Single-frame greedy NMS: routed through the fused batched kernel
+    (B=1).  Returns (keep_idx (max_out,), valid mask), identical to
+    ``ref.nms_ref``."""
+    keep, valid = batched_nms(boxes[None], scores[None], iou_thr=iou_thr,
+                              max_out=max_out, use_pallas=use_pallas)
+    return keep[0], valid[0]
+
+
+def nms_serial(boxes, scores, iou_thr=0.5, max_out=64, use_pallas=True):
+    """The seed's per-image NMS: IoU matrix (Pallas kernel when
+    ``use_pallas``) + an A-step sequential suppress loop.  Kept as the
+    benchmark baseline for the fused batched path."""
     iou = iou_matrix(boxes, boxes, use_pallas=use_pallas)
     order = jnp.argsort(-scores)
 

@@ -70,6 +70,18 @@ def nms_ref(boxes, scores, iou_thr: float = 0.5, max_out: int = 64):
     return keep, valid
 
 
+def batched_nms_ref(boxes, scores, iou_thr: float = 0.5,
+                    max_out: int = 64, score_thr: float | None = None):
+    """Batched greedy-NMS oracle: ``nms_ref`` vmapped over the leading
+    frame axis, with the detector's score-threshold semantics (scores
+    below ``score_thr`` are zeroed but still iterated, exactly like the
+    seed decode path).  boxes (B, A, 4), scores (B, A)."""
+    if score_thr is not None:
+        scores = jnp.where(scores >= score_thr, scores, 0.0)
+    return jax.vmap(
+        lambda b, s: nms_ref(b, s, iou_thr, max_out))(boxes, scores)
+
+
 def rwkv_scan_ref(r, k, v, w, u, s0):
     """Stepwise oracle for the RWKV-6 recurrence kernel.
     r/k/v/w: (B,H,T,hs); u: (H,hs); s0: (B,H,hs,hs)."""

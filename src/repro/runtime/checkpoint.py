@@ -16,7 +16,9 @@ import numpy as np
 
 
 def _flatten(tree):
-    flat, treedef = jax.tree.flatten_with_path(tree)
+    # jax.tree_util spelling: jax.tree.flatten_with_path only exists in
+    # newer jax releases than this container ships
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
     return {jax.tree_util.keystr(kp): np.asarray(x) for kp, x in flat}, \
         jax.tree.structure(tree)
 
@@ -43,7 +45,7 @@ def restore_checkpoint(path: str | Path, like: Any,
     ``shardings`` when given (mesh-sharded restore)."""
     path = Path(path)
     data = np.load(path / "arrays.npz")
-    flat, treedef = jax.tree.flatten_with_path(like)
+    flat, treedef = jax.tree_util.tree_flatten_with_path(like)
     out = []
     for kp, ref in flat:
         key = jax.tree_util.keystr(kp)

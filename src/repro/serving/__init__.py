@@ -1,3 +1,5 @@
-from .engine import Request, Response, ReplicaExecutor, ServingEngine
+from .engine import (DetectionEngine, DetectionResponse, FrameRequest,
+                     ReplicaExecutor, Request, Response, ServingEngine)
 
-__all__ = ["Request", "Response", "ReplicaExecutor", "ServingEngine"]
+__all__ = ["DetectionEngine", "DetectionResponse", "FrameRequest",
+           "Request", "Response", "ReplicaExecutor", "ServingEngine"]

@@ -35,6 +35,26 @@ class Request:
 
 
 @dataclass
+class FrameRequest:
+    rid: int
+    image: np.ndarray             # (S, S, 3) float32
+    t_arrival: float = 0.0
+
+
+@dataclass
+class DetectionResponse:
+    rid: int
+    boxes: np.ndarray             # (max_out, 4)
+    scores: np.ndarray            # (max_out,)
+    classes: np.ndarray           # (max_out,)
+    valid: np.ndarray             # (max_out,) bool
+    replica: int
+    t_start: float
+    t_done: float
+    service_s: float
+
+
+@dataclass
 class Response:
     rid: int
     tokens: np.ndarray            # generated ids
@@ -143,5 +163,85 @@ class ServingEngine:
             "p50_latency": float(np.median(
                 [r.t_done - r.t_start for r in responses])) if responses
             else 0.0,
+            "per_replica": {r.idx: r.n_processed for r in self.replicas},
+        }
+
+
+class DetectionEngine:
+    """Video-frame payload path: the paper's "n detection models" served
+    from the same scheduler/replica machinery as the token path, with
+    frames routed through the detector in micro-batches so the whole
+    batch is decoded and suppressed by ONE fused batched-NMS launch
+    (repro.kernels.nms) instead of a per-frame kernel + serial loop."""
+
+    def __init__(self, cfg=None, params=None, n_replicas: int = 4,
+                 scheduler: str = "fcfs", micro_batch: int = 8,
+                 replica_speeds: Optional[Sequence[float]] = None,
+                 use_pallas: bool = False, score_thr: float = 0.4,
+                 iou_thr: float = 0.5, max_out: int = 32, seed: int = 0):
+        from ..detector import SSDConfig, decode_detections, init_ssd, \
+            make_anchors
+        self.cfg = cfg or SSDConfig()
+        self.params = params if params is not None else init_ssd(
+            self.cfg, jax.random.PRNGKey(seed))
+        self.anchors = jnp.asarray(make_anchors(self.cfg))
+        self.micro_batch = micro_batch
+        self._infer = jax.jit(lambda imgs: decode_detections(
+            self.params, self.cfg, imgs, self.anchors, score_thr=score_thr,
+            iou_thr=iou_thr, max_out=max_out, use_pallas=use_pallas))
+        speeds = list(replica_speeds or [1.0] * n_replicas)
+        self.replicas = [ReplicaExecutor(i, s) for i, s in enumerate(speeds)]
+        self.scheduler = make_scheduler(scheduler, self.replicas,
+                                        host_overhead=1e-4)
+        self._warm = False
+
+    def _detect_batch(self, images: np.ndarray):
+        """One fused launch for a full micro-batch; returns numpy
+        results + measured wall seconds."""
+        t0 = time.perf_counter()
+        out = self._infer(jnp.asarray(images))
+        out = jax.block_until_ready(out)
+        return tuple(np.asarray(o) for o in out), time.perf_counter() - t0
+
+    def warmup(self):
+        size = self.cfg.image_size
+        imgs = np.zeros((self.micro_batch, size, size, 3), np.float32)
+        _, wall = self._detect_batch(imgs)
+        for r in self.replicas:
+            r._last_wall = wall / self.micro_batch
+        self._warm = True
+
+    def serve(self, frames: Sequence[FrameRequest]) -> Dict:
+        """Micro-batched detection serving: frames are grouped in arrival
+        order into micro-batches, each batch runs through the batched
+        fast path once, and the per-frame share of the measured wall time
+        drives the virtual-clock scheduler."""
+        if not self._warm:
+            self.warmup()
+        frames = sorted(frames, key=lambda f: f.t_arrival)
+        responses: List[DetectionResponse] = []
+        mb = self.micro_batch
+        for lo in range(0, len(frames), mb):
+            chunk = frames[lo:lo + mb]
+            images = np.stack([f.image for f in chunk])
+            if len(chunk) < mb:                   # pad: static jit shapes
+                pad = np.zeros((mb - len(chunk),) + images.shape[1:],
+                               images.dtype)
+                images = np.concatenate([images, pad], 0)
+            (boxes, scores, classes, valid), wall = \
+                self._detect_batch(images)
+            per_frame = wall / len(chunk)
+            for r in self.replicas:
+                r._last_wall = per_frame
+            for i, f in enumerate(chunk):
+                a = self.scheduler.blocking_assign(f.rid, f.t_arrival)
+                responses.append(DetectionResponse(
+                    f.rid, boxes[i], scores[i], classes[i], valid[i],
+                    a.executor_idx, a.t_start, a.t_done, per_frame))
+        responses.sort(key=lambda r: r.rid)       # sequence synchronizer
+        makespan = max((r.t_done for r in responses), default=0.0)
+        return {
+            "responses": responses,
+            "throughput_fps": len(responses) / max(makespan, 1e-9),
             "per_replica": {r.idx: r.n_processed for r in self.replicas},
         }

@@ -1,0 +1,182 @@
+"""Fused batched NMS (Pallas kernel + XLA twin) vs the serial oracle:
+bit-compatibility on random inputs plus the edge cases that break naive
+implementations — zero survivors, fully-suppressed clusters, score ties,
+degenerate zero-area (padding) boxes — and the vectorized mAP scorer vs
+the seed's loop implementation."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.ops import batched_nms, nms, nms_serial
+
+BOTH = pytest.mark.parametrize("use_pallas", [True, False],
+                               ids=["pallas", "xla"])
+
+
+def _rand_batch(rng, B, A, scale=1.0):
+    tl = rng.uniform(0, 1, (B, A, 2))
+    wh = rng.uniform(0.01, 0.35, (B, A, 2)) * scale
+    boxes = jnp.asarray(np.concatenate([tl, tl + wh], -1), jnp.float32)
+    scores = jnp.asarray(rng.random((B, A)), jnp.float32)
+    return boxes, scores
+
+
+# ------------------------------------------------------- bit-compat sweep
+@BOTH
+@pytest.mark.parametrize("B,A,max_out", [
+    (1, 1, 8), (2, 3, 4), (4, 160, 32), (3, 97, 16), (8, 200, 64),
+    (2, 33, 200),          # max_out > n boxes
+])
+def test_batched_nms_bit_compatible_with_ref(B, A, max_out, use_pallas):
+    rng = np.random.default_rng(B * 1000 + A)
+    boxes, scores = _rand_batch(rng, B, A)
+    for iou_thr in (0.3, 0.5, 0.7):
+        kr, vr = ref.batched_nms_ref(boxes, scores, iou_thr, max_out)
+        kf, vf = batched_nms(boxes, scores, iou_thr=iou_thr,
+                             max_out=max_out, use_pallas=use_pallas)
+        assert np.array_equal(np.asarray(kr), np.asarray(kf))
+        assert np.array_equal(np.asarray(vr), np.asarray(vf))
+
+
+@BOTH
+def test_single_frame_wrapper_matches_serial_path(use_pallas):
+    rng = np.random.default_rng(7)
+    boxes, scores = _rand_batch(rng, 1, 120)
+    kf, vf = nms(boxes[0], scores[0], 0.5, 24, use_pallas=use_pallas)
+    ks, vs = nms_serial(boxes[0], scores[0], 0.5, 24)
+    assert np.array_equal(np.asarray(kf), np.asarray(ks))
+    assert np.array_equal(np.asarray(vf), np.asarray(vs))
+
+
+# ------------------------------------------------------------- edge cases
+@BOTH
+def test_zero_surviving_boxes(use_pallas):
+    """All scores below the threshold with stop_at_zero: nothing valid."""
+    rng = np.random.default_rng(0)
+    boxes, scores = _rand_batch(rng, 2, 50)
+    scores = scores * 0.2                       # all < 0.4
+    keep, valid = batched_nms(boxes, scores, score_thr=0.4, max_out=16,
+                              stop_at_zero=True, use_pallas=use_pallas)
+    assert not bool(np.asarray(valid).any())
+
+
+@BOTH
+def test_all_suppressed_cluster_keeps_single_box(use_pallas):
+    """Near-identical boxes collapse to exactly the top-scoring one."""
+    base = np.array([10.0, 10.0, 30.0, 30.0])
+    boxes = jnp.asarray(base[None, None] +
+                        np.linspace(0, 0.5, 20)[None, :, None],
+                        jnp.float32)            # (1, 20, 4) tight cluster
+    scores = jnp.asarray(np.linspace(0.5, 0.9, 20)[None], jnp.float32)
+    keep, valid = batched_nms(boxes, scores, iou_thr=0.5, max_out=8,
+                              use_pallas=use_pallas)
+    kept = np.asarray(keep)[np.asarray(valid)]
+    assert kept.tolist() == [19]                # highest score wins
+    # two well-separated clusters -> one survivor each
+    far = jnp.concatenate([boxes, boxes + 100.0], axis=1)
+    fscores = jnp.concatenate([scores, scores * 0.9], axis=1)
+    keep, valid = batched_nms(far, fscores, iou_thr=0.5, max_out=8,
+                              use_pallas=use_pallas)
+    assert sorted(np.asarray(keep)[np.asarray(valid)].tolist()) == [19, 39]
+
+
+@BOTH
+def test_score_ties_break_by_index_like_ref(use_pallas):
+    """Equal scores: stable order (lowest original index first), matching
+    the oracle's stable argsort exactly."""
+    rng = np.random.default_rng(3)
+    boxes, _ = _rand_batch(rng, 2, 64)
+    scores = jnp.asarray(
+        rng.choice([0.3, 0.6, 0.9], size=(2, 64)), jnp.float32)
+    kr, vr = ref.batched_nms_ref(boxes, scores, 0.5, 32)
+    kf, vf = batched_nms(boxes, scores, iou_thr=0.5, max_out=32,
+                         use_pallas=use_pallas)
+    assert np.array_equal(np.asarray(kr), np.asarray(kf))
+    assert np.array_equal(np.asarray(vr), np.asarray(vf))
+
+
+@BOTH
+def test_degenerate_zero_area_boxes_no_nan(use_pallas):
+    """Zero-area boxes (the kernel's padding rows have the same shape)
+    must produce IoU 0 — kept independently, never NaN."""
+    boxes = jnp.asarray([[[5, 5, 5, 5], [5, 5, 5, 5], [0, 0, 10, 10],
+                          [40, 40, 41, 41]]], jnp.float32)
+    scores = jnp.asarray([[0.9, 0.8, 0.7, 0.6]], jnp.float32)
+    kr, vr = ref.batched_nms_ref(boxes, scores, 0.5, 4)
+    kf, vf = batched_nms(boxes, scores, iou_thr=0.5, max_out=4,
+                         use_pallas=use_pallas)
+    assert np.array_equal(np.asarray(kr), np.asarray(kf))
+    assert np.array_equal(np.asarray(vr), np.asarray(vf))
+    # both degenerate boxes survive (IoU(a, a) == 0 < thr) — like the ref
+    assert np.asarray(vf).sum() == 4
+
+
+@BOTH
+def test_padded_rows_never_leak_into_output(use_pallas):
+    """A tiny frame (far below one tile) still yields exactly its own
+    indices: internal padding rows are never candidates."""
+    boxes = jnp.asarray([[[0, 0, 10, 10], [100, 100, 110, 110]]],
+                        jnp.float32)
+    scores = jnp.asarray([[0.5, 0.9]], jnp.float32)
+    keep, valid = batched_nms(boxes, scores, max_out=32,
+                              use_pallas=use_pallas)
+    kept = np.asarray(keep)[np.asarray(valid)]
+    assert sorted(kept.tolist()) == [0, 1]
+    assert np.asarray(valid).sum() == 2
+
+
+# -------------------------------------------------- decode-path equivalence
+def test_decode_detections_same_outputs_both_paths():
+    """The detector's decode must give identical valid-masked outputs via
+    the Pallas kernel and the XLA twin."""
+    import jax
+    from repro.detector import (SSDConfig, decode_detections, init_ssd,
+                                make_anchors)
+    cfg = SSDConfig()
+    anchors = make_anchors(cfg)
+    params = init_ssd(cfg, jax.random.PRNGKey(0))
+    imgs = jax.random.uniform(jax.random.PRNGKey(1), (3, 64, 64, 3))
+    outs = {}
+    for up in (True, False):
+        outs[up] = decode_detections(params, cfg, imgs, anchors,
+                                     score_thr=0.1, use_pallas=up)
+    (b1, s1, c1, v1), (b2, s2, c2, v2) = outs[True], outs[False]
+    assert np.array_equal(np.asarray(v1), np.asarray(v2))
+    v = np.asarray(v1)
+    assert np.array_equal(np.asarray(b1)[v], np.asarray(b2)[v])
+    assert np.array_equal(np.asarray(s1)[v], np.asarray(s2)[v])
+    assert np.array_equal(np.asarray(c1)[v], np.asarray(c2)[v])
+
+
+# ------------------------------------------------------ vectorized mAP
+@pytest.mark.parametrize("video,model,n", [
+    ("ETH-Sunnyday", "yolov3", 2), ("ADL-Rundle-6", "ssd300", 3)])
+def test_vectorized_map_equals_loop(video, model, n):
+    from repro.core import (ParallelDetector, SequenceSynchronizer,
+                            evaluate_map, evaluate_map_loop)
+    from repro.core.simulator import simulate
+    from repro.core.stream import FrameStream
+    det = ParallelDetector(video, model, ["ncs2"] * n)
+    result = simulate(FrameStream(det.video), det.scheduler)
+    synced = SequenceSynchronizer().order(result)
+    fast = evaluate_map(det.video, synced, det.detector)
+    loop = evaluate_map_loop(det.video, synced, det.detector)
+    assert fast == pytest.approx(loop, abs=1e-12)
+
+
+def test_vectorized_map_heterogeneous_det_by_frame():
+    from repro.core import (ParallelDetector, SequenceSynchronizer,
+                            evaluate_map, evaluate_map_loop)
+    from repro.core.simulator import simulate
+    from repro.core.stream import FrameStream
+    det = ParallelDetector("ETH-Sunnyday", ["yolov3", "ssd300"],
+                           ["fast_cpu", "ncs2"])
+    result = simulate(FrameStream(det.video), det.scheduler)
+    synced = SequenceSynchronizer().order(result)
+    dbf = {a.frame_idx: det.detectors[a.executor_idx]
+           for a in result.assignments}
+    fast = evaluate_map(det.video, synced, det.detector, det_by_frame=dbf)
+    loop = evaluate_map_loop(det.video, synced, det.detector,
+                             det_by_frame=dbf)
+    assert fast == pytest.approx(loop, abs=1e-12)
