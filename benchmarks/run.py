@@ -1,8 +1,10 @@
 """Benchmark harness: one function per paper table + kernel micro-benches
-+ the roofline summary.  Prints ``name,us_per_call,derived`` CSV rows (and
-detailed per-table CSV blocks as comments).
++ the detection fast-path (fused NMS) and tracking-subsystem
+trajectories + the roofline summary, so the paper tables and the kernel
+perf trajectory land in ONE report.  Prints ``name,us_per_call,derived``
+CSV rows (and detailed per-table CSV blocks as comments).
 
-  PYTHONPATH=src python -m benchmarks.run [--only table_iv,...]
+  PYTHONPATH=src python -m benchmarks.run [--only table_iv,nms,tracking,...]
 """
 from __future__ import annotations
 
@@ -52,7 +54,7 @@ def main():
         "hetero_models": tables.hetero_models,     # beyond-paper (§V)
     }
     names = (args.only.split(",") if args.only else
-             list(benches) + ["kernels", "roofline"])
+             list(benches) + ["kernels", "nms", "tracking", "roofline"])
 
     print("name,us_per_call,derived")
     for name in names:
@@ -63,6 +65,33 @@ def main():
         from benchmarks.kernel_bench import bench_kernels
         for name, us, derived in bench_kernels():
             print(f"{name},{us:.0f},{derived}")
+
+    if "nms" in names:
+        # the detection fast path at the decode shape (smoke iterations):
+        # derived = speedup of the fused batched launch over the seed's
+        # per-image vmap + serial-loop path
+        from benchmarks.nms_bench import bench_nms_decode, bench_nms_random
+        d = bench_nms_decode(8, 160, 32, iters=3, reps=2)
+        print(f"nms_decode_fused_xla,{d['fused_xla_ms']*1e3:.0f},"
+              f"{d['loop_ms'] / d['fused_xla_ms']:.2f}")
+        r = bench_nms_random(8, 160, 32, iters=3, reps=2)
+        print(f"nms_random_fused_xla,{r['fused_xla_ms']*1e3:.0f},"
+              f"{r['loop_ms'] / r['fused_xla_ms']:.2f}")
+
+    if "tracking" in names:
+        # tracker step latency + the mAP the tracker recovers from
+        # dropped frames (derived = recovered mAP points at n=2)
+        from benchmarks.tracking_bench import bench_recovered_map, \
+            bench_step
+        s = bench_step(1, 32, iters=3, reps=2)
+        row = bench_recovered_map((2,), smoke=True)[0]
+        print(f"tracking_step,{s['step_ms']*1e3:.0f},"
+              f"{row['map_recovered']:.4f}")
+        print(f"# tracking n={row['n']}: drop_rate={row['drop_rate']:.2f} "
+              f"map_stale={row['map_stale']:.4f} "
+              f"map_tracked={row['map_tracked']:.4f} "
+              f"coverage={row['coverage']:.3f} "
+              f"id_switches={row['id_switches']:.0f}")
 
     if "roofline" in names:
         try:

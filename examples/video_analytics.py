@@ -5,7 +5,10 @@
   2. Use REAL measured inference wall-times as executor service times.
   3. Stream the video through the parallel detection pipeline
      (scheduler -> n executors -> sequence synchronizer).
-  4. Report the FPS/mAP table across n (the paper's Table IV shape).
+  4. Report the FPS/mAP table across n (the paper's Table IV shape),
+     with the track-and-interpolate columns: mAP of the tracked output
+     stream (dropped frames filled with tracker-coasted boxes instead
+     of stale reuse), track coverage of object-frames, and ID switches.
 
   PYTHONPATH=src python examples/video_analytics.py [--steps 150]
 """
@@ -88,15 +91,17 @@ def main():
     lam = video.spec.fps
     print(f"  lambda={lam} FPS, mu=2.5 FPS -> paper rule: n in "
           f"[{choose_n(lam, 2.5)}, {choose_n(lam, 2.5, 'conservative')}]")
-    print(f"  {'n':>3s} {'sigma(FPS)':>10s} {'mAP%':>6s} {'drops/proc':>10s}")
+    print(f"  {'n':>3s} {'sigma(FPS)':>10s} {'mAP%':>6s} {'trk mAP%':>8s} "
+          f"{'cover%':>6s} {'IDsw':>4s} {'drops/proc':>10s}")
     off = ParallelDetector(video.spec, "yolov3", ["ncs2"]).run(offline=True)
     print(f"  off {off.sigma:10.2f} {off.map_score*100:6.1f} "
-          f"{'(zero-drop reference)':>10s}")
+          f"{'—':>8s} {'—':>6s} {'—':>4s} {'(zero-drop ref)':>10s}")
     for n in range(1, 8):
         r = ParallelDetector(video.spec, "yolov3", ["ncs2"] * n,
-                             "fcfs").run()
+                             "fcfs").run(track=True)
         print(f"  {n:3d} {r.sigma:10.2f} {r.map_score*100:6.1f} "
-              f"{r.drops_per_processed:10.1f}")
+              f"{r.map_tracked*100:8.1f} {r.track_coverage*100:6.1f} "
+              f"{r.id_switches:4.0f} {r.drops_per_processed:10.1f}")
 
 
 if __name__ == "__main__":

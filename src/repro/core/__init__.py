@@ -8,7 +8,8 @@ from .scheduler import (FCFSScheduler, LockstepRRScheduler,
 from .simulator import SimResult, simulate
 from .synchronizer import SequenceSynchronizer, SyncedFrame
 from .parallel import ParallelDetector, choose_n, n_range
-from .quality import ProxyDetector, evaluate_map, evaluate_map_loop
+from .quality import (ProxyDetector, evaluate_map, evaluate_map_dets,
+                      evaluate_map_loop, track_quality)
 
 __all__ = [
     "BENCHMARK_VIDEOS", "ADL_RUNDLE_6", "ETH_SUNNYDAY", "Frame",
@@ -17,5 +18,6 @@ __all__ = [
     "FCFSScheduler", "LockstepRRScheduler", "ProportionalScheduler",
     "WeightedRRScheduler", "make_scheduler", "SimResult", "simulate",
     "SequenceSynchronizer", "SyncedFrame", "ParallelDetector", "choose_n",
-    "n_range", "ProxyDetector", "evaluate_map", "evaluate_map_loop",
+    "n_range", "ProxyDetector", "evaluate_map", "evaluate_map_dets",
+    "evaluate_map_loop", "track_quality",
 ]

@@ -10,7 +10,8 @@ from typing import List, Optional, Sequence
 
 from .executor import (DEVICE_PROFILES, MODEL_PROFILES, DetectorExecutor,
                        DeviceProfile)
-from .quality import ProxyDetector, evaluate_map
+from .quality import (ProxyDetector, evaluate_map, evaluate_map_dets,
+                      track_quality)
 from .scheduler import make_scheduler
 from .simulator import SimResult, simulate
 from .stream import BENCHMARK_VIDEOS, FrameStream, SyntheticVideo, VideoSpec
@@ -47,6 +48,12 @@ class Report:
     drop_rate: float
     drops_per_processed: float
     offline: bool = False
+    # track-and-interpolate mode (run(track=True)): mAP of the tracked
+    # output stream, fraction of object-frames a track covered, and the
+    # tracker's identity-switch count
+    map_tracked: float = float("nan")
+    track_coverage: float = float("nan")
+    id_switches: float = float("nan")
 
     def row(self):
         return (f"{self.video},{self.model},{self.scheduler},{self.n},"
@@ -97,11 +104,19 @@ class ParallelDetector:
         return make_scheduler(self.scheduler_kind, self.executors,
                               host_overhead=self.scheduler.host_overhead)
 
-    def run(self, offline: bool = False, with_map: bool = True) -> Report:
+    def run(self, offline: bool = False, with_map: bool = True,
+            track: bool = False) -> Report:
         """σ_P ("Detection FPS" in the paper's tables) is the saturated
         processing capacity — the paper feeds the stored test video and
         measures processing rate, so n=7 can exceed λ.  Drop rate and mAP
-        come from the λ-paced online run."""
+        come from the λ-paced online run.
+
+        ``track=True`` additionally runs the batched tracker over the
+        paced run (``repro.tracking.fill_stream``): dropped frames get
+        tracker-coasted boxes instead of stale reuse, and the report
+        gains the tracked stream's mAP plus ID-switch / coverage
+        counters — the offline-reference comparison extended to the
+        tracked stream."""
         if offline:
             result = simulate(FrameStream(self.video), self.scheduler,
                               offline=True)
@@ -124,6 +139,15 @@ class ParallelDetector:
         m = evaluate_map(self.video, synced, self.detector,
                          det_by_frame=det_by_frame) if with_map \
             else float("nan")
-        return Report(self.spec.name, self.model, self.scheduler_kind,
-                      len(self.executors), cap.sigma, m,
-                      paced.drop_rate, paced.drops_per_processed)
+        report = Report(self.spec.name, self.model, self.scheduler_kind,
+                        len(self.executors), cap.sigma, m,
+                        paced.drop_rate, paced.drops_per_processed)
+        if track:
+            from ..tracking import fill_stream   # lazy: avoids cycles
+            tracked = fill_stream(self.video, paced, self.detector,
+                                  det_by_frame=det_by_frame)
+            tq = track_quality(self.video, tracked)
+            report.map_tracked = evaluate_map_dets(self.video, tracked)
+            report.track_coverage = tq["coverage"]
+            report.id_switches = tq["id_switches"]
+        return report

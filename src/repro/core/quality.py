@@ -13,6 +13,17 @@ mAP falls exactly as in Tables IV/V.
 ``evaluate_map`` is the vectorized scorer (batched GT fetch, per-source
 class partitioning, argmax-based greedy matcher); ``evaluate_map_loop``
 keeps the seed's Python-loop implementation as the equality oracle.
+``evaluate_map_dets`` scores a stream whose per-frame detections are
+given explicitly (the tracked/interpolated stream), and
+``track_quality`` adds the tracker-identity counters (ID switches,
+object coverage, fragmentation).
+
+Noise synthesis is a batched counter-based sampler (splitmix64-style
+hashing -> uniforms -> Box-Muller normals / inverse-CDF Poisson): every
+frame's detections are a pure function of (model, seed, frame) — batch
+composition and evaluation order can't change them — and a whole run's
+noise is drawn in a handful of vectorized calls instead of per-frame
+PCG streams.
 """
 from __future__ import annotations
 
@@ -45,63 +56,160 @@ class Detections:
     scores: np.ndarray     # (K,)
 
 
+# ------------------------------------------------ counter-based sampler
+# splitmix64-style finalizer over uint64 arrays: every random draw is
+# keyed by (frame key, stream id, element index), so the sampler is a
+# pure function of the frame — batchable to any width with zero state.
+_G = np.uint64(0x9E3779B97F4A7C15)
+_M1 = np.uint64(0xBF58476D1CE4E5B9)
+_M2 = np.uint64(0x94D049BB133111EB)
+_M3 = np.uint64(0xD6E8FEB86659FD93)
+
+
+def _mix64(x: np.ndarray) -> np.ndarray:
+    x = (x ^ (x >> np.uint64(30))) * _M1
+    x = (x ^ (x >> np.uint64(27))) * _M2
+    return x ^ (x >> np.uint64(31))
+
+
+def _uniform(keys: np.ndarray, stream: int, n: int) -> np.ndarray:
+    """keys (F,) uint64 -> (F, n) uniforms in [0, 1)."""
+    e = np.arange(1, n + 1, dtype=np.uint64)
+    with np.errstate(over="ignore"):     # uint64 wraparound is the point
+        h = _mix64(keys[:, None] + _G * np.uint64(stream)
+                   + _M3 * e[None, :])
+    return (h >> np.uint64(11)) * (1.0 / (1 << 53))
+
+
+def _normal(keys: np.ndarray, stream: int, n: int) -> np.ndarray:
+    """Box-Muller over two uniform streams -> (F, n) standard normals."""
+    u1 = _uniform(keys, stream, n)
+    u2 = _uniform(keys, stream + 1, n)
+    return np.sqrt(-2.0 * np.log1p(-u1)) * np.cos(2.0 * np.pi * u2)
+
+
+def _poisson(keys: np.ndarray, stream: int, lam: float,
+             kmax: int = 16) -> np.ndarray:
+    """Inverse-CDF Poisson(lam) -> (F,) ints in [0, kmax]."""
+    u = _uniform(keys, stream, 1)[:, 0]
+    k = np.arange(kmax + 1, dtype=float)
+    pmf = np.exp(-lam) * np.cumprod(np.concatenate(
+        [[1.0], lam / k[1:]]))
+    cdf = np.cumsum(pmf)
+    return np.minimum((u[:, None] >= cdf[None, :]).sum(-1), kmax)
+
+
+_FP_MAX = 16   # Poisson tail cap (P(N>16) < 1e-7 at the rates in NOISE)
+
+
 class ProxyDetector:
     def __init__(self, model: str, video_name: str, seed: int = 0):
         self.noise = NOISE[model]
         self.diff = DIFFICULTY.get(video_name, 1.0)
         self.model = model
         self.seed = seed
+        # crc32, not hash(): string hashing is randomized per process
+        # (PYTHONHASHSEED), which made mAP values — and the paper-band
+        # tests — flap from run to run
+        self._base = (crc32(f"{model}/{seed}".encode()) & 0xFFFF) * 100003
         self._memo: Dict[int, Detections] = {}
         self._memo_video: SyntheticVideo | None = None
 
     def detect(self, video: SyntheticVideo, frame_idx: int) -> Detections:
-        # detection is a pure function of (model, seed, video, frame):
-        # memoize so repeated evaluations (offline + paced runs,
-        # benchmark sweeps) pay the noise synthesis once per frame; the
-        # cache resets when a different video object comes through
+        return self.detect_many(video, [frame_idx])[0]
+
+    def detect_many(self, video: SyntheticVideo,
+                    frame_idxs) -> List[Detections]:
+        """Detections for many frames at once: the whole batch's noise is
+        synthesized in one vectorized pass.  Detection is a pure function
+        of (model, seed, video, frame): results are memoized so repeated
+        evaluations (offline + paced runs, benchmark sweeps) pay the
+        synthesis once per frame; the cache resets when a different video
+        object comes through."""
         if video is not self._memo_video:
             self._memo = {}
             self._memo_video = video
-        hit = self._memo.get(frame_idx)
-        if hit is not None:
-            return hit
-        # crc32, not hash(): string hashing is randomized per process
-        # (PYTHONHASHSEED), which made mAP values — and the paper-band
-        # tests — flap from run to run
-        rng = np.random.default_rng(
-            (crc32(f"{self.model}/{self.seed}".encode()) & 0xFFFF)
-            * 100003 + frame_idx)
-        gt = video.boxes_at(frame_idx)
-        classes = video.classes
+        missing = sorted({int(i) for i in frame_idxs} - self._memo.keys())
+        if missing:
+            self._synthesize(video, np.asarray(missing, np.int64))
+        return [self._memo[int(i)] for i in frame_idxs]
+
+    def _synthesize(self, video: SyntheticVideo, idx: np.ndarray):
         n = self.noise
+        F, K = len(idx), len(video.classes)
+        keys = _mix64(np.uint64(self._base) + idx.astype(np.uint64))
+        gt = video.boxes_at_many(idx)                    # (F, K, 4)
         # difficulty scales misses/false-positives strongly but jitter only
         # mildly, so harder scenes lower the mAP plateau without putting
         # every match at the IoU-threshold cliff
         jit = 1.0 + 0.3 * (self.diff - 1.0)
         miss_diff = min(self.diff, n["max_miss_diff"])
-        keep = rng.random(len(gt)) >= min(n["miss"] * miss_diff, 0.9)
-        boxes, cls = gt[keep].copy(), classes[keep].copy()
-        wh = np.stack([boxes[:, 2] - boxes[:, 0],
-                       boxes[:, 3] - boxes[:, 1]], -1)
-        center = (boxes[:, :2] + boxes[:, 2:]) / 2
-        center += rng.normal(0, n["c"] * jit, center.shape) * wh
-        wh = wh * np.exp(rng.normal(0, n["s"] * jit, wh.shape))
+        keep = _uniform(keys, 0, K) >= min(n["miss"] * miss_diff, 0.9)
+        wh = gt[..., 2:] - gt[..., :2]
+        center = (gt[..., :2] + gt[..., 2:]) / 2
+        center = center + _normal(keys, 1, K * 2).reshape(F, K, 2) \
+            * (n["c"] * jit) * wh
+        wh = wh * np.exp(_normal(keys, 3, K * 2).reshape(F, K, 2)
+                         * (n["s"] * jit))
         boxes = np.concatenate([center - wh / 2, center + wh / 2], -1)
-        scores = rng.uniform(0.55, 0.99, len(boxes))
+        scores = 0.55 + _uniform(keys, 5, K) * (0.99 - 0.55)
         # false positives
-        n_fp = rng.poisson(n["fp"] * self.diff)
+        n_fp = _poisson(keys, 6, n["fp"] * self.diff, _FP_MAX)
         W, H = video.spec.width, video.spec.height
-        fp_wh = np.stack([rng.uniform(0.03, 0.15, n_fp) * W,
-                          rng.uniform(0.06, 0.3, n_fp) * H], -1)
-        fp_c = np.stack([rng.uniform(0, W, n_fp),
-                         rng.uniform(0, H, n_fp)], -1)
+        fp_wh = np.stack(
+            [(0.03 + _uniform(keys, 7, _FP_MAX) * 0.12) * W,
+             (0.06 + _uniform(keys, 8, _FP_MAX) * 0.24) * H], -1)
+        fp_c = np.stack([_uniform(keys, 9, _FP_MAX) * W,
+                         _uniform(keys, 10, _FP_MAX) * H], -1)
         fp_boxes = np.concatenate([fp_c - fp_wh / 2, fp_c + fp_wh / 2], -1)
-        boxes = np.concatenate([boxes, fp_boxes], 0)
-        cls = np.concatenate([cls, rng.integers(0, video.N_CLASSES, n_fp)])
-        scores = np.concatenate([scores, rng.uniform(0.1, 0.65, n_fp)])
-        det = Detections(boxes, cls, scores)
-        self._memo[frame_idx] = det
-        return det
+        fp_cls = (_uniform(keys, 11, _FP_MAX)
+                  * video.N_CLASSES).astype(np.int64)
+        fp_sc = 0.1 + _uniform(keys, 12, _FP_MAX) * (0.65 - 0.1)
+        for f, i in enumerate(idx):
+            k, m = keep[f], int(n_fp[f])
+            self._memo[int(i)] = Detections(
+                np.concatenate([boxes[f][k], fp_boxes[f][:m]], 0),
+                np.concatenate([video.classes[k], fp_cls[f][:m]]),
+                np.concatenate([scores[f][k], fp_sc[f][:m]]))
+
+
+def proxy_detect_fn(video: SyntheticVideo, detector: ProxyDetector,
+                    max_out: int = 24):
+    """Bridge a ProxyDetector into ``serving.DetectionEngine``'s
+    ``detect_fn`` interface: an ``(images, rids) -> (boxes, scores,
+    classes, valid)`` callable that looks detections up by frame id
+    (rid) instead of running the mini-SSD — the oracle detector the
+    engine tests and ``benchmarks/tracking_bench.py`` share."""
+    def detect(images, rids):
+        B = len(images)
+        detector.detect_many(video, [r for r in rids if r >= 0])
+        boxes = np.zeros((B, max_out, 4), np.float32)
+        scores = np.zeros((B, max_out), np.float32)
+        classes = np.zeros((B, max_out), np.int32)
+        valid = np.zeros((B, max_out), bool)
+        for i, rid in enumerate(rids):
+            if rid < 0:                     # batch padding row
+                continue
+            d = detector.detect(video, int(rid))
+            k = min(len(d.boxes), max_out)
+            boxes[i, :k] = d.boxes[:k]
+            scores[i, :k] = d.scores[:k]
+            classes[i, :k] = d.classes[:k]
+            valid[i, :k] = True
+        return boxes, scores, classes, valid
+    return detect
+
+
+def responses_to_detections(responses, n_frames: int) -> List:
+    """Engine responses -> the per-arrival-frame ``Detections`` list
+    ``evaluate_map_dets`` scores (None for frames with no response)."""
+    per: List = [None] * n_frames
+    for r in responses:
+        v = np.asarray(r.valid, bool)
+        per[r.rid] = Detections(np.asarray(r.boxes)[v],
+                                np.asarray(r.classes)[v],
+                                np.asarray(r.scores)[v])
+    return per
 
 
 def iou_matrix(a: np.ndarray, b: np.ndarray) -> np.ndarray:
@@ -144,6 +252,34 @@ def _batched_iou(a: np.ndarray, b: np.ndarray) -> np.ndarray:
     return inter / np.maximum(aa[:, :, None] + ab[:, None, :] - inter, 1e-9)
 
 
+def _batched_greedy_tp(fb: np.ndarray, fs: np.ndarray, gt: np.ndarray,
+                       iou_thr: float):
+    """Batched greedy matcher: fb (F, Dmax, 4) score-sorted padded
+    detection boxes, fs (F, Dmax) scores (-inf padding), gt (F, K, 4)
+    -> (tp (F, Dmax) float, real (F, Dmax) bool).
+
+    The seed walked detections in score order and matched each against
+    the *single* best-IoU ground-truth box (a second-best box never
+    rescues a detection whose best box is taken), so the match rule is
+    separable: a detection is TP iff its best-IoU box clears the
+    threshold AND no earlier (higher-score) detection in the same frame
+    claimed the same box — one argmax plus a triangular first-claim
+    mask, batched over frames."""
+    d_max = fb.shape[1]
+    real = np.isfinite(fs)
+    ious = _batched_iou(fb, gt)                        # (F, Dmax, K)
+    jb = np.argmax(ious, -1)                           # best gt per det
+    best = np.take_along_axis(ious, jb[..., None], -1)[..., 0]
+    ok = (best >= iou_thr) & real
+    # first claim wins: det i is blocked if an earlier (higher-score)
+    # qualified det j < i targets the same gt box
+    same = jb[:, :, None] == jb[:, None, :]            # (F, i, j)
+    earlier = np.tril(np.ones((d_max, d_max), bool), -1)
+    blocked = np.any(same & ok[:, None, :] & earlier[None], -1)
+    tp = (ok & ~blocked).astype(float)
+    return tp, real
+
+
 def evaluate_map(video: SyntheticVideo, synced: Sequence[SyncedFrame],
                  detector: ProxyDetector, iou_thr: float = 0.5,
                  det_by_frame: Dict[int, ProxyDetector] | None = None
@@ -156,16 +292,11 @@ def evaluate_map(video: SyntheticVideo, synced: Sequence[SyncedFrame],
     with the model that ran it (heterogeneous-model deployments).
 
     Vectorization: detections per unique source frame are synthesized and
-    class-partitioned once; ground truth for every output frame comes
-    from one batched ``boxes_at_many`` call; and the per-frame/per-class
-    Python greedy-matching loops collapse into ONE batched matcher per
-    class over all frames at once.  The seed walked detections in score
-    order and matched each against the *single* best-IoU ground-truth box
-    (a second-best box never rescues a detection whose best box is
-    taken), so the match rule is separable: a detection is TP iff its
-    best-IoU box clears the threshold AND no earlier (higher-score)
-    detection in the same frame claimed the same box — one argmax plus a
-    triangular first-claim mask, batched over frames.
+    class-partitioned once (one batched sampler call per detector);
+    ground truth for every output frame comes from one batched
+    ``boxes_at_many`` call; and the per-frame/per-class Python greedy-
+    matching loops collapse into ONE batched matcher per class over all
+    frames at once (``_batched_greedy_tp``).
     """
     C = video.N_CLASSES
     gt_cls = video.classes
@@ -175,9 +306,17 @@ def evaluate_map(video: SyntheticVideo, synced: Sequence[SyncedFrame],
 
     # detections per unique source frame, class-partitioned + score-sorted
     # once (the same (D, 4) arrays serve every output frame that reuses
-    # this source, stale or fresh)
-    det_cache: Dict[int, List[tuple]] = {}
+    # this source, stale or fresh); sources are batched per detector so
+    # each model pays one vectorized noise-synthesis call
     scored = [sf for sf in synced if sf.source_index >= 0]
+    by_det: Dict[int, tuple] = {}
+    for sf in scored:
+        det = (det_by_frame or {}).get(sf.source_index, detector)
+        by_det.setdefault(id(det), (det, set()))[1].add(sf.source_index)
+    for det, idxs in by_det.values():
+        det.detect_many(video, sorted(idxs))
+
+    det_cache: Dict[int, List[tuple]] = {}
     sources = []
     for sf in scored:
         if sf.source_index in det_cache:
@@ -218,19 +357,116 @@ def evaluate_map(video: SyntheticVideo, synced: Sequence[SyncedFrame],
             ss[i, :len(ds)] = ds
         fb = sb[frame_src]                     # (F, Dmax, 4)
         fs = ss[frame_src]                     # (F, Dmax)
-        real = np.isfinite(fs)
-        ious = _batched_iou(fb, all_gt[:, cls_masks[c]])   # (F, Dmax, K)
-        jb = np.argmax(ious, -1)               # best gt per detection
-        best = np.take_along_axis(ious, jb[..., None], -1)[..., 0]
-        ok = (best >= iou_thr) & real
-        # first claim wins: det i is blocked if an earlier (higher-score)
-        # qualified det j < i targets the same gt box
-        same = jb[:, :, None] == jb[:, None, :]            # (F, i, j)
-        earlier = np.tril(np.ones((d_max, d_max), bool), -1)
-        blocked = np.any(same & ok[:, None, :] & earlier[None], -1)
-        tp = (ok & ~blocked).astype(float)
+        tp, real = _batched_greedy_tp(fb, fs, all_gt[:, cls_masks[c]],
+                                      iou_thr)
         aps.append(average_precision(tp[real], fs[real], n_gt[c]))
     return float(np.mean(aps)) if aps else 0.0
+
+
+def evaluate_map_dets(video: SyntheticVideo, dets: Sequence,
+                      iou_thr: float = 0.5) -> float:
+    """mAP over an output stream whose per-frame detections are given
+    explicitly — the tracked stream (fresh detections on processed
+    frames, tracker-predicted boxes on interpolated ones).
+
+    ``dets[f]`` covers arrival frame f: any object with ``boxes`` /
+    ``classes`` / ``scores`` attributes (``Detections``,
+    ``tracking.TrackedFrame``) or None for a frame with no output
+    (which still contributes its ground truth to the recall
+    denominator, exactly like ``evaluate_map``)."""
+    C = video.N_CLASSES
+    F = len(dets)
+    cls_masks = [video.classes == c for c in range(C)]
+    n_gt = {c: F * int(np.sum(m)) for c, m in enumerate(cls_masks)}
+    all_gt = video.boxes_at_many(np.arange(F, dtype=np.int64))
+
+    # partition each frame once (score-sorted per class), not per class
+    empty = (np.zeros((0, 4)), np.zeros(0))
+    by_class = [[empty] * F for _ in range(C)]
+    for f, d in enumerate(dets):
+        if d is None or len(d.boxes) == 0:
+            continue
+        db = np.asarray(d.boxes)
+        ds = np.asarray(d.scores)
+        dc = np.asarray(d.classes)
+        order = np.argsort(-ds)
+        db, ds, dc = db[order], ds[order], dc[order]
+        for c in range(C):
+            m = dc == c
+            if m.any():
+                by_class[c][f] = (db[m], ds[m])
+
+    aps = []
+    for c in range(C):
+        if n_gt[c] == 0:
+            continue
+        per_frame = by_class[c]
+        d_max = max(len(db) for db, _ in per_frame)
+        if d_max == 0:
+            aps.append(average_precision(np.zeros(0), np.zeros(0),
+                                         n_gt[c]))
+            continue
+        fb = np.zeros((F, d_max, 4))
+        fs = np.full((F, d_max), -np.inf)
+        for i, (db, ds) in enumerate(per_frame):
+            fb[i, :len(db)] = db
+            fs[i, :len(ds)] = ds
+        tp, real = _batched_greedy_tp(fb, fs, all_gt[:, cls_masks[c]],
+                                      iou_thr)
+        aps.append(average_precision(tp[real], fs[real], n_gt[c]))
+    return float(np.mean(aps)) if aps else 0.0
+
+
+def track_quality(video: SyntheticVideo, tracked: Sequence,
+                  iou_thr: float = 0.5) -> Dict[str, float]:
+    """Tracker-identity counters over a tracked output stream
+    (``tracking.fill_stream`` output, or anything with per-frame
+    ``index`` / ``boxes`` / ``track_ids``):
+
+    * ``id_switches``  — times a ground-truth object's matched track id
+      changed (both ids real; standard MOTA-style accounting against
+      the last known id).
+    * ``coverage``     — fraction of object-frames covered by an
+      emitted box at ``iou_thr``.
+    * ``fragments``    — covered -> uncovered transitions while the
+      object remains in frame (track continuity).
+    """
+    last_id: Dict[int, int] = {}
+    prev_cov: Dict[int, bool] = {}
+    switches = frags = covered = total = 0
+    for tf in tracked:
+        gt = video.boxes_at(tf.index)
+        total += len(gt)
+        boxes = np.asarray(tf.boxes, float).reshape(-1, 4)
+        tids = np.asarray(tf.track_ids, np.int64).reshape(-1)
+        matched_obj: Dict[int, int] = {}
+        if len(boxes):
+            iou = iou_matrix(gt, boxes)
+            order = np.argsort(-iou, axis=None)
+            used_t = set()
+            for flat in order:
+                o, t = divmod(int(flat), len(boxes))
+                if iou[o, t] < iou_thr:
+                    break
+                if o in matched_obj or t in used_t:
+                    continue
+                matched_obj[o] = int(tids[t])
+                used_t.add(t)
+        for o in range(len(gt)):
+            cov = o in matched_obj
+            covered += cov
+            if cov:
+                tid = matched_obj[o]
+                if tid >= 0:
+                    if o in last_id and last_id[o] != tid:
+                        switches += 1
+                    last_id[o] = tid
+            elif prev_cov.get(o, False):
+                frags += 1
+            prev_cov[o] = cov
+    return {"id_switches": float(switches),
+            "coverage": covered / max(total, 1),
+            "fragments": float(frags)}
 
 
 def evaluate_map_loop(video: SyntheticVideo, synced: Sequence[SyncedFrame],

@@ -21,6 +21,7 @@ class SyncedFrame:
     source_index: int        # which processed frame supplied the detection
     stale: bool              # True if filled from an earlier frame
     t_ready: float           # when the detection became available
+    interpolated: bool = False   # True if a tracker synthesized the fill
 
 
 class SequenceSynchronizer:
@@ -58,6 +59,18 @@ class SequenceSynchronizer:
         for sf in ordered:
             emit_t = max(emit_t, sf.t_ready)
             yield SyncedFrame(sf.index, sf.source_index, sf.stale, emit_t)
+
+    def order_tracked(self, result: SimResult) -> List[SyncedFrame]:
+        """Arrival-order output for the track-and-interpolate mode:
+        processed frames are emitted as usual; every dropped frame is
+        tagged ``interpolated`` — its boxes come from the tracker's
+        coasted prediction instead of replaying ``source_index``
+        (which is kept as the last frame that fed the tracker, i.e.
+        the prediction's information horizon; -1 before the first
+        processed frame, where the coasted table is still empty)."""
+        return [SyncedFrame(sf.index, sf.source_index, sf.stale,
+                            sf.t_ready, interpolated=sf.stale)
+                for sf in self.order(result)]
 
     def output_fps(self, result: SimResult) -> float:
         frames = self.order(result)

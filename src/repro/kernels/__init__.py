@@ -25,12 +25,20 @@ one launch per micro-batch).  Layout and tiling choices:
 the production path on hosts where Pallas runs interpreted;
 ``ops.batched_nms`` dispatches between the two, and ``ref.nms_ref`` /
 ``ref.batched_nms_ref`` remain the bit-compatibility oracles.
+
+``association.greedy_assign_pallas`` follows the same three-tier
+pattern for the tracking subsystem's data-association step (IoU cost
+matrix + greedy assignment fused into one launch per frame batch, XLA
+twin ``greedy_assign_xla``, oracle ``ref.greedy_assign_ref``,
+dispatch ``ops.greedy_assign``).
 """
 from . import ops, ref
+from .association import greedy_assign_pallas, greedy_assign_xla
 from .decode_attention import decode_attention
 from .flash_attention import flash_attention
 from .iou import iou_matrix
 from .nms import batched_nms_pallas, batched_nms_xla
 
 __all__ = ["ops", "ref", "decode_attention", "flash_attention",
-           "iou_matrix", "batched_nms_pallas", "batched_nms_xla"]
+           "iou_matrix", "batched_nms_pallas", "batched_nms_xla",
+           "greedy_assign_pallas", "greedy_assign_xla"]

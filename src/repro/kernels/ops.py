@@ -21,6 +21,8 @@ import jax
 import jax.numpy as jnp
 
 from . import ref
+from .association import greedy_assign_pallas as _assoc_pallas
+from .association import greedy_assign_xla as _assoc_xla
 from .decode_attention import decode_attention as _decode_pallas
 from .flash_attention import flash_attention as _flash_pallas
 from .iou import iou_matrix as _iou_pallas
@@ -70,6 +72,38 @@ def batched_nms(boxes, scores, *, iou_thr=0.5, score_thr=None, max_out=64,
     if use_pallas:
         return _nms_pallas(boxes, scores, interpret=_interpret(), **kw)
     return _nms_xla(boxes, scores, **kw)
+
+
+def greedy_assign(t_boxes, d_boxes, *, t_mask=None, d_mask=None,
+                  t_cls=None, d_cls=None, iou_thr=0.3, use_pallas=True):
+    """Fused IoU cost-matrix + greedy assignment over a frame batch
+    (the tracker's association step).
+
+    t_boxes (B, T, 4) xyxy predicted track boxes, d_boxes (B, D, 4)
+    detections -> match (B, T) int32 (detection index per track slot or
+    -1).  Masks default to all-true, class ids to all-zero (no class
+    gate).  Like NMS, the fused batched path has an XLA twin of the
+    same algorithm for non-TPU hosts; ``ref.greedy_assign_ref`` is the
+    bit-compatibility oracle.
+    """
+    B, T, _ = t_boxes.shape
+    D = d_boxes.shape[1]
+    if T == 0 or D == 0:
+        return jnp.full((B, T), -1, jnp.int32)
+    t_mask = (jnp.ones((B, T), bool) if t_mask is None
+              else t_mask.astype(bool))
+    d_mask = (jnp.ones((B, D), bool) if d_mask is None
+              else d_mask.astype(bool))
+    t_cls = (jnp.zeros((B, T), jnp.int32) if t_cls is None
+             else t_cls.astype(jnp.int32))
+    d_cls = (jnp.zeros((B, D), jnp.int32) if d_cls is None
+             else d_cls.astype(jnp.int32))
+    if use_pallas:
+        return _assoc_pallas(t_boxes, d_boxes, t_mask, d_mask, t_cls,
+                             d_cls, iou_thr=iou_thr,
+                             interpret=_interpret())
+    return _assoc_xla(t_boxes, d_boxes, t_mask, d_mask, t_cls, d_cls,
+                      iou_thr=iou_thr)
 
 
 def nms(boxes, scores, iou_thr=0.5, max_out=64, use_pallas=True):

@@ -82,6 +82,42 @@ def batched_nms_ref(boxes, scores, iou_thr: float = 0.5,
         lambda b, s: nms_ref(b, s, iou_thr, max_out))(boxes, scores)
 
 
+def greedy_assign_ref(t_boxes, d_boxes, t_mask, d_mask, t_cls=None,
+                      d_cls=None, iou_thr: float = 0.3):
+    """Greedy IoU-association oracle for the tracking subsystem.
+
+    t_boxes (B, T, 4) xyxy predicted track boxes, d_boxes (B, D, 4)
+    detections, boolean slot masks, optional int class ids (class
+    mismatch forbids a pair) -> match (B, T) int32: detection index per
+    track slot or -1.  Per step the globally best remaining pair is
+    committed (row-major tie break) and its row+column retired, until
+    the best pair falls below ``iou_thr``.
+    """
+    import numpy as np
+    t_boxes = jnp.asarray(t_boxes)
+    d_boxes = jnp.asarray(d_boxes)
+    B, T = t_boxes.shape[0], t_boxes.shape[1]
+    D = d_boxes.shape[1]
+    match = np.full((B, T), -1, np.int32)
+    for b in range(B):
+        ok = (np.asarray(t_mask[b], bool)[:, None] &
+              np.asarray(d_mask[b], bool)[None, :])
+        if t_cls is not None:
+            ok &= (np.asarray(t_cls[b])[:, None] ==
+                   np.asarray(d_cls[b])[None, :])
+        cost = np.where(ok, np.asarray(iou_matrix_ref(t_boxes[b],
+                                                      d_boxes[b])), -1.0)
+        for _ in range(min(T, D)):
+            flat = int(np.argmax(cost))
+            i, j = divmod(flat, D)
+            if cost[i, j] < iou_thr:
+                break
+            match[b, i] = j
+            cost[i, :] = -1.0
+            cost[:, j] = -1.0
+    return jnp.asarray(match)
+
+
 def rwkv_scan_ref(r, k, v, w, u, s0):
     """Stepwise oracle for the RWKV-6 recurrence kernel.
     r/k/v/w: (B,H,T,hs); u: (H,hs); s0: (B,H,hs,hs)."""

@@ -48,10 +48,12 @@ class DetectionResponse:
     scores: np.ndarray            # (max_out,)
     classes: np.ndarray           # (max_out,)
     valid: np.ndarray             # (max_out,) bool
-    replica: int
+    replica: int                  # -1 for tracker-interpolated frames
     t_start: float
     t_done: float
     service_s: float
+    interpolated: bool = False    # True: boxes coasted by the tracker
+    track_ids: Optional[np.ndarray] = None
 
 
 @dataclass
@@ -172,76 +174,210 @@ class DetectionEngine:
     from the same scheduler/replica machinery as the token path, with
     frames routed through the detector in micro-batches so the whole
     batch is decoded and suppressed by ONE fused batched-NMS launch
-    (repro.kernels.nms) instead of a per-frame kernel + serial loop."""
+    (repro.kernels.nms) instead of a per-frame kernel + serial loop.
+
+    * ``micro_batch=None`` (the default) sizes each micro-batch by the
+      queue depth at dispatch time — the frames that arrived while the
+      replicas were busy — capped at ``max_micro_batch``; an explicit
+      int keeps the fixed-size behaviour.
+    * ``drop_when_busy=True`` reproduces the paper's frame dropping on
+      this path: a frame arriving with every replica slot taken gets no
+      detection.
+    * ``track_and_interpolate=True`` closes that gap with the batched
+      tracker (``repro.tracking``): dropped frames are emitted in
+      arrival order with tracker-coasted boxes, tagged
+      ``interpolated`` — the sequence synchronizer's stale-reuse fill
+      upgraded to motion-compensated prediction.
+    * ``detect_fn`` swaps the mini-SSD for any ``(images, rids) ->
+      (boxes, scores, classes, valid)`` callable (oracle detectors in
+      tests/benchmarks); ``service_time`` pins the virtual per-frame
+      service time so paced runs are deterministic.
+    """
 
     def __init__(self, cfg=None, params=None, n_replicas: int = 4,
-                 scheduler: str = "fcfs", micro_batch: int = 8,
+                 scheduler: str = "fcfs", micro_batch: Optional[int] = None,
+                 max_micro_batch: int = 8,
                  replica_speeds: Optional[Sequence[float]] = None,
                  use_pallas: bool = False, score_thr: float = 0.4,
-                 iou_thr: float = 0.5, max_out: int = 32, seed: int = 0):
-        from ..detector import SSDConfig, decode_detections, init_ssd, \
-            make_anchors
-        self.cfg = cfg or SSDConfig()
-        self.params = params if params is not None else init_ssd(
-            self.cfg, jax.random.PRNGKey(seed))
-        self.anchors = jnp.asarray(make_anchors(self.cfg))
+                 iou_thr: float = 0.5, max_out: int = 32, seed: int = 0,
+                 drop_when_busy: bool = False,
+                 track_and_interpolate: bool = False,
+                 tracker_cfg=None, detect_fn=None,
+                 service_time: Optional[float] = None):
         self.micro_batch = micro_batch
-        self._infer = jax.jit(lambda imgs: decode_detections(
-            self.params, self.cfg, imgs, self.anchors, score_thr=score_thr,
-            iou_thr=iou_thr, max_out=max_out, use_pallas=use_pallas))
+        self.max_micro_batch = micro_batch or max_micro_batch
+        self.drop_when_busy = drop_when_busy or track_and_interpolate
+        self.track_and_interpolate = track_and_interpolate
+        self.service_time = service_time
+        self._detect_fn = detect_fn
+        if track_and_interpolate:
+            from ..tracking import TrackerConfig   # lazy: avoids cycles
+            self.tracker_cfg = tracker_cfg or TrackerConfig()
+        if detect_fn is None:
+            from ..detector import SSDConfig, decode_detections, \
+                init_ssd, make_anchors
+            self.cfg = cfg or SSDConfig()
+            self.params = params if params is not None else init_ssd(
+                self.cfg, jax.random.PRNGKey(seed))
+            self.anchors = jnp.asarray(make_anchors(self.cfg))
+            self._infer = jax.jit(lambda imgs: decode_detections(
+                self.params, self.cfg, imgs, self.anchors,
+                score_thr=score_thr, iou_thr=iou_thr, max_out=max_out,
+                use_pallas=use_pallas))
+        else:
+            self.cfg = cfg
         speeds = list(replica_speeds or [1.0] * n_replicas)
         self.replicas = [ReplicaExecutor(i, s) for i, s in enumerate(speeds)]
         self.scheduler = make_scheduler(scheduler, self.replicas,
                                         host_overhead=1e-4)
         self._warm = False
 
-    def _detect_batch(self, images: np.ndarray):
+    def _detect_batch(self, images: np.ndarray, rids=None):
         """One fused launch for a full micro-batch; returns numpy
         results + measured wall seconds."""
         t0 = time.perf_counter()
-        out = self._infer(jnp.asarray(images))
-        out = jax.block_until_ready(out)
+        if self._detect_fn is not None:
+            out = self._detect_fn(images, rids)
+        else:
+            out = jax.block_until_ready(self._infer(jnp.asarray(images)))
         return tuple(np.asarray(o) for o in out), time.perf_counter() - t0
 
     def warmup(self):
-        size = self.cfg.image_size
-        imgs = np.zeros((self.micro_batch, size, size, 3), np.float32)
-        _, wall = self._detect_batch(imgs)
+        mb = self.max_micro_batch
+        if self._detect_fn is None:
+            size = self.cfg.image_size
+            imgs = np.zeros((mb, size, size, 3), np.float32)
+            _, wall = self._detect_batch(imgs, rids=[-1] * mb)
+            per_frame = wall / mb
+        else:
+            per_frame = self.service_time or 1e-3
         for r in self.replicas:
-            r._last_wall = wall / self.micro_batch
+            r._last_wall = self.service_time or per_frame
         self._warm = True
+
+    def _chunk_size(self, frames, i: int) -> int:
+        """Queue depth at dispatch time: how many frames have arrived by
+        the moment the earliest replica frees up (at least one — the
+        head frame defines 'now' when the pipeline is idle)."""
+        if self.micro_batch is not None:
+            return self.micro_batch
+        t_now = max(frames[i].t_arrival,
+                    min(r.busy_until for r in self.replicas))
+        q = 1
+        while (i + q < len(frames) and q < self.max_micro_batch
+               and frames[i + q].t_arrival <= t_now):
+            q += 1
+        return q
+
+    @staticmethod
+    def _bucket(k: int) -> int:
+        """Pad adaptive batches to power-of-two buckets: O(log mb) jit
+        traces instead of one per distinct queue depth."""
+        b = 1
+        while b < k:
+            b <<= 1
+        return b
 
     def serve(self, frames: Sequence[FrameRequest]) -> Dict:
         """Micro-batched detection serving: frames are grouped in arrival
-        order into micro-batches, each batch runs through the batched
+        order into micro-batches (queue-depth-sized unless a fixed
+        ``micro_batch`` was given), each batch runs through the batched
         fast path once, and the per-frame share of the measured wall time
-        drives the virtual-clock scheduler."""
+        drives the virtual-clock scheduler.  With ``drop_when_busy``,
+        frames arriving into a full pipeline are dropped — and, with
+        ``track_and_interpolate``, re-emitted with tracker-predicted
+        boxes so the output stream covers every arrival frame."""
         if not self._warm:
             self.warmup()
         frames = sorted(frames, key=lambda f: f.t_arrival)
         responses: List[DetectionResponse] = []
-        mb = self.micro_batch
-        for lo in range(0, len(frames), mb):
-            chunk = frames[lo:lo + mb]
-            images = np.stack([f.image for f in chunk])
-            if len(chunk) < mb:                   # pad: static jit shapes
-                pad = np.zeros((mb - len(chunk),) + images.shape[1:],
+        dropped: List[FrameRequest] = []
+        pad_to = self.micro_batch or None     # fixed mode: one jit shape
+        i = 0
+        while i < len(frames):
+            chunk = frames[i:i + self._chunk_size(frames, i)]
+            i += len(chunk)
+            kept, assigns = [], []
+            if self.drop_when_busy:
+                # the drop decision happens at arrival time, before this
+                # batch's wall time exists — it uses the service estimate
+                # from the previous batch (a real system can do no better)
+                for f in chunk:
+                    a = self.scheduler.assign(f.rid, f.t_arrival)
+                    if a is None:
+                        dropped.append(f)
+                        continue
+                    kept.append(f)
+                    assigns.append(a)
+            else:
+                kept = chunk
+            if not kept:
+                continue
+            images = np.stack([f.image for f in kept])
+            b = pad_to or self._bucket(len(kept))
+            if len(kept) < b:                     # pad: static jit shapes
+                pad = np.zeros((b - len(kept),) + images.shape[1:],
                                images.dtype)
                 images = np.concatenate([images, pad], 0)
-            (boxes, scores, classes, valid), wall = \
-                self._detect_batch(images)
-            per_frame = wall / len(chunk)
+            (boxes, scores, classes, valid), wall = self._detect_batch(
+                images, rids=[f.rid for f in kept] + [-1] * (b - len(kept)))
+            per_frame = self.service_time or wall / len(kept)
             for r in self.replicas:
                 r._last_wall = per_frame
-            for i, f in enumerate(chunk):
-                a = self.scheduler.blocking_assign(f.rid, f.t_arrival)
+            if not self.drop_when_busy:
+                # blocking mode assigns after the measurement, so this
+                # batch's own wall time drives its virtual-clock slots
+                assigns = [self.scheduler.blocking_assign(f.rid,
+                                                          f.t_arrival)
+                           for f in kept]
+            for j, (f, a) in enumerate(zip(kept, assigns)):
                 responses.append(DetectionResponse(
-                    f.rid, boxes[i], scores[i], classes[i], valid[i],
+                    f.rid, boxes[j], scores[j], classes[j], valid[j],
                     a.executor_idx, a.t_start, a.t_done, per_frame))
+        interpolated = 0
+        if self.track_and_interpolate and (dropped or responses):
+            responses = self._interpolate(frames, responses)
+            interpolated = sum(r.interpolated for r in responses)
         responses.sort(key=lambda r: r.rid)       # sequence synchronizer
         makespan = max((r.t_done for r in responses), default=0.0)
         return {
             "responses": responses,
+            "dropped": [f.rid for f in dropped],
+            "coverage": len(responses) / max(len(frames), 1),
+            "interpolated": interpolated,
             "throughput_fps": len(responses) / max(makespan, 1e-9),
             "per_replica": {r.idx: r.n_processed for r in self.replicas},
         }
+
+    def _interpolate(self, frames, responses) -> List[DetectionResponse]:
+        """Tracker pass in arrival order: processed frames feed the
+        track table (and get their detections' track ids attached);
+        dropped frames are re-emitted with the coasted prediction,
+        tagged ``interpolated``, ready no earlier than the newest
+        detection they extrapolate from."""
+        from .. import tracking as trk
+        cfg = self.tracker_cfg
+        state = trk.init_state(1, cfg)
+        by_rid = {r.rid: r for r in responses}
+        out: List[DetectionResponse] = []
+        emit_t = 0.0
+        for f in frames:
+            r = by_rid.get(f.rid)
+            if r is not None:
+                state, det_tid = trk.step(
+                    state, jnp.asarray(r.boxes[None]),
+                    jnp.asarray(r.scores[None]),
+                    jnp.asarray(r.classes[None], jnp.int32),
+                    jnp.asarray(r.valid[None]), cfg)
+                r.track_ids = np.asarray(det_tid)[0]
+                emit_t = max(emit_t, r.t_done)
+                out.append(r)
+            else:
+                state = trk.coast(state, cfg)
+                b, s, c, tid, emit = (np.asarray(a) for a in
+                                      trk.output(state, cfg))
+                t_ready = max(emit_t, f.t_arrival)
+                out.append(DetectionResponse(
+                    f.rid, b[0], s[0], c[0], emit[0], -1, t_ready,
+                    t_ready, 0.0, interpolated=True, track_ids=tid[0]))
+        return out

@@ -1,0 +1,122 @@
+"""Edge-case coverage for core/stream.py and core/synchronizer.py:
+out-of-order completion, burst arrivals, 100%-drop intervals, leading
+drops, and the batched ground-truth fetch."""
+import numpy as np
+
+from repro.core import (DEVICE_PROFILES, MODEL_PROFILES, DetectorExecutor,
+                        FrameStream, SequenceSynchronizer, SyntheticVideo,
+                        VideoSpec, make_scheduler, simulate)
+from repro.core.scheduler import Assignment
+from repro.core.simulator import SimResult
+from repro.core.stream import ETH_SUNNYDAY
+
+
+def _result(assignments, dropped, n):
+    return SimResult("t", 10.0, assignments, dropped, n,
+                     max((a.t_done for a in assignments), default=0.0))
+
+
+# ------------------------------------------------------- synchronizer
+def test_out_of_order_completion_reorders_and_monotonic_stream():
+    """Executors finishing out of temporal order: frame 2 completes
+    before frame 1; the synchronizer re-establishes index order and the
+    streaming interface never emits with a decreasing clock."""
+    a = [Assignment(0, 0, 0.0, 0.3),
+         Assignment(1, 1, 0.1, 0.9),       # slow replica
+         Assignment(2, 0, 0.3, 0.5),       # done before frame 1
+         Assignment(3, 1, 0.9, 1.1)]
+    r = _result(a, [], 4)
+    synced = SequenceSynchronizer().order(r)
+    assert [s.index for s in synced] == [0, 1, 2, 3]
+    assert [s.t_ready for s in synced] == [0.3, 0.9, 0.5, 1.1]
+    streamed = list(SequenceSynchronizer().stream(r))
+    emits = [s.t_ready for s in streamed]
+    assert emits == sorted(emits)          # reorder buffer: monotonic
+    assert emits[2] == 0.9                 # frame 2 held behind frame 1
+
+
+def test_total_drop_interval_reuses_last_processed():
+    """A 100%-drop interval (every executor busy for a stretch): all
+    frames in the gap are stale fills from the last processed frame."""
+    a = [Assignment(i, 0, i * 0.1, i * 0.1 + 0.05) for i in range(3)]
+    a += [Assignment(9, 0, 0.9, 0.95)]
+    r = _result(a, list(range(3, 9)), 10)
+    synced = SequenceSynchronizer().order(r)
+    for s in synced[3:9]:
+        assert s.stale and s.source_index == 2
+        assert s.t_ready == synced[2].t_ready
+    assert not synced[9].stale and synced[9].source_index == 9
+
+
+def test_leading_drops_have_no_source():
+    """Frames dropped before anything was processed have nothing to
+    reuse: source_index -1.  order_tracked still tags them interpolated
+    — the tracker emits its (empty) coasted table for them, never a
+    replay."""
+    a = [Assignment(3, 0, 0.3, 0.4), Assignment(4, 0, 0.4, 0.5)]
+    r = _result(a, [0, 1, 2], 5)
+    sync = SequenceSynchronizer()
+    synced = sync.order(r)
+    for s in synced[:3]:
+        assert s.stale and s.source_index == -1 and s.t_ready == 0.0
+    tagged = sync.order_tracked(r)
+    assert [s.interpolated for s in tagged] == [True] * 3 + [False] * 2
+
+
+def test_everything_dropped():
+    r = _result([], list(range(5)), 5)
+    sync = SequenceSynchronizer()
+    synced = sync.order(r)
+    assert all(s.source_index == -1 and s.stale for s in synced)
+    assert sync.output_fps(r) == 0.0
+
+
+def test_burst_arrivals_conserve_frames():
+    """All frames arriving in one burst (arrival_rate >> mu): every
+    frame is processed once or dropped once, causality holds, and the
+    synchronizer still covers the full index range."""
+    video = SyntheticVideo(VideoSpec("t", 10.0, 60, 320, 240, False, 4, 1))
+    execs = [DetectorExecutor(DEVICE_PROFILES["ncs2"],
+                              MODEL_PROFILES["yolov3"]) for _ in range(2)]
+    r = simulate(FrameStream(video), make_scheduler("fcfs", execs),
+                 arrival_rate=1e6)
+    assert len(r.assignments) + len(r.dropped) == 60
+    assert set(r.processed_indices).isdisjoint(r.dropped)
+    assert len(r.dropped) > 40                 # burst overwhelms 2 sticks
+    for a in r.assignments:
+        assert a.t_done > a.t_start >= 0.0
+    synced = SequenceSynchronizer().order(r)
+    assert [s.index for s in synced] == list(range(60))
+
+
+def test_output_fps_counts_fresh_frames_only():
+    a = [Assignment(0, 0, 0.0, 0.5), Assignment(2, 0, 0.5, 1.0)]
+    r = _result(a, [1, 3], 4)
+    assert SequenceSynchronizer().output_fps(r) == 2 / 1.0
+
+
+# ------------------------------------------------------------- stream
+def test_boxes_at_many_matches_boxes_at():
+    video = SyntheticVideo(ETH_SUNNYDAY)
+    idx = np.array([0, 1, 7, 100, 353])
+    batched = video.boxes_at_many(idx)
+    for k, i in enumerate(idx):
+        assert np.allclose(batched[k], video.boxes_at(int(i)))
+
+
+def test_bounce_keeps_objects_in_frame():
+    video = SyntheticVideo(ETH_SUNNYDAY)
+    W, H = video.spec.width, video.spec.height
+    for i in (0, 100, 1000, 5000):
+        b = video.boxes_at(i)
+        c = (b[:, :2] + b[:, 2:]) / 2
+        assert (c[:, 0] >= 0).all() and (c[:, 0] <= W).all()
+        assert (c[:, 1] >= 0).all() and (c[:, 1] <= H).all()
+
+
+def test_frame_stream_arrival_clock():
+    video = SyntheticVideo(ETH_SUNNYDAY)
+    frames = list(FrameStream(video))
+    assert len(frames) == video.spec.n_frames
+    assert frames[14].t_arrival == 14 / video.spec.fps
+    assert frames[0].boxes.shape == (video.spec.n_objects, 4)
