@@ -1,0 +1,147 @@
+"""Multi-camera (NVR) serving trajectory: how tracked mAP and tracker
+step latency scale as 1..8 cameras multiplex onto the same detector
+replicas.
+
+  PYTHONPATH=src python benchmarks/nvr_bench.py [--smoke] [--out PATH]
+
+Emits ``BENCH_nvr.json`` with one row per camera count:
+
+* ``coverage``          — MIN per-stream frame coverage under
+  ``track_and_interpolate`` (measured; asserted 1.0 for every camera);
+* ``tracker_launches``  — trk.step/trk.coast calls counted at the call
+  sites (measured, not engine bookkeeping); asserted equal to the
+  frames-per-stream tick count (ONE batched launch advances all B
+  streams per tick);
+* ``map_mean``/``map_min`` — per-stream tracked mAP aggregated across
+  cameras (vs the drop-frames baseline's ``map_drop_mean``);
+* ``step_ms``           — tracker step latency at batch B = n_streams
+  (the lockstep launch the serve loop issues every tick).
+
+The pool is FIXED (2 replicas at the NCS2-calibrated 2.5 FPS) while
+the camera count grows, so the per-camera detection budget shrinks
+with n — the measurement-study regime where per-stream tracking cost
+caps multi-camera scale.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+import jax
+import numpy as np
+
+
+def bench_nvr_row(n_streams, n_frames, rate, step_iters, step_reps):
+    from benchmarks.tracking_bench import bench_step
+    import repro.tracking as trk
+    from repro.core import evaluate_streams, proxy_detect_fn_streams
+    from repro.serving import DetectionEngine, make_nvr_streams
+
+    frames, frame_of, videos, dets = make_nvr_streams(n_streams,
+                                                      n_frames, rate)
+    oracle = proxy_detect_fn_streams(videos, dets, frame_of)
+
+    def run(**kw):
+        eng = DetectionEngine(detect_fn=oracle, n_replicas=2,
+                              service_time=0.4, **kw)
+        t0 = time.perf_counter()
+        out = eng.serve(frames)
+        return out, (time.perf_counter() - t0) * 1e3
+
+    out_d, _ = run(drop_when_busy=True)
+    # count the ACTUAL tracker launches (trk.step/trk.coast calls),
+    # not the engine's own bookkeeping — the one-launch-per-tick claim
+    # is measured, not trusted
+    launches = {"n": 0}
+    orig_step, orig_coast = trk.step, trk.coast
+
+    def spy_step(*a, **kw):
+        launches["n"] += 1
+        return orig_step(*a, **kw)
+
+    def spy_coast(*a, **kw):
+        launches["n"] += 1
+        return orig_coast(*a, **kw)
+
+    trk.step, trk.coast = spy_step, spy_coast
+    try:
+        out_t, serve_ms = run(track_and_interpolate=True)
+    finally:
+        trk.step, trk.coast = orig_step, orig_coast
+    # acceptance: full per-stream coverage (measured), one tracker
+    # launch per tick (ticks == frames_per_stream: equal-length streams)
+    cov_min = min(v["coverage"] for v in out_t["per_stream"].values())
+    assert cov_min == 1.0, cov_min
+    assert launches["n"] == n_frames, (launches["n"], n_frames)
+    assert out_t["tracker_ticks"] == n_frames
+    q_t = evaluate_streams(videos, out_t["streams"], n_frames)
+    q_d = evaluate_streams(videos, out_d["streams"], n_frames)
+    step = bench_step(n_streams, 24, step_iters, step_reps)
+    return {
+        "n_streams": n_streams,
+        "frames_per_stream": n_frames,
+        "stream_rate_fps": rate,
+        "coverage": cov_min,
+        "tracker_launches": launches["n"],
+        "tracker_ticks": out_t["tracker_ticks"],
+        "interpolated": out_t["interpolated"],
+        "drop_coverage": round(out_d["coverage"], 4),
+        "map_mean": round(q_t["map_mean"], 4),
+        "map_min": round(q_t["map_min"], 4),
+        "map_drop_mean": round(q_d["map_mean"], 4),
+        "id_switches_total": q_t["id_switches_total"],
+        "step_ms": step["step_ms"],
+        "serve_ms": round(serve_ms, 1),
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny stream lengths / single rep (CI)")
+    ap.add_argument("--out", default=str(
+        Path(__file__).resolve().parents[1] / "BENCH_nvr.json"))
+    args = ap.parse_args()
+
+    if args.smoke:
+        ns, n_frames, iters, reps = (1, 4, 8), 24, 3, 1
+    else:
+        ns, n_frames, iters, reps = (1, 2, 4, 8), 96, 20, 5
+
+    rows = [bench_nvr_row(n, n_frames, rate=2.0, step_iters=iters,
+                          step_reps=reps) for n in ns]
+    out = {
+        "bench": "nvr_multi_camera_serving",
+        "backend": jax.default_backend(),
+        "smoke": bool(args.smoke),
+        "pool": {"n_replicas": 2, "service_time_s": 0.4},
+        "rows": rows,
+        "acceptance": {
+            # both measured per row: coverage is the min over streams,
+            # launches are counted at the trk.step/trk.coast call sites
+            "per_stream_coverage_all_one": all(
+                r["coverage"] == 1.0 for r in rows),
+            "one_tracker_launch_per_tick": all(
+                r["tracker_launches"] == r["frames_per_stream"]
+                for r in rows),
+            "eight_camera_run_completes": any(r["n_streams"] == 8
+                                              for r in rows),
+            # strict win wherever the pool actually dropped frames
+            # (n=1 at 2 FPS fits the 5 FPS pool: nothing to recover)
+            "tracked_beats_drop_when_overloaded": all(
+                r["map_mean"] > r["map_drop_mean"]
+                for r in rows if r["interpolated"] > 0),
+        },
+    }
+    Path(args.out).write_text(json.dumps(out, indent=2) + "\n")
+    print(json.dumps(out, indent=2))
+
+
+if __name__ == "__main__":
+    main()

@@ -54,7 +54,8 @@ def main():
         "hetero_models": tables.hetero_models,     # beyond-paper (§V)
     }
     names = (args.only.split(",") if args.only else
-             list(benches) + ["kernels", "nms", "tracking", "roofline"])
+             list(benches) + ["kernels", "nms", "tracking", "nvr",
+                              "roofline"])
 
     print("name,us_per_call,derived")
     for name in names:
@@ -92,6 +93,19 @@ def main():
               f"map_tracked={row['map_tracked']:.4f} "
               f"coverage={row['coverage']:.3f} "
               f"id_switches={row['id_switches']:.0f}")
+
+    if "nvr" in names:
+        # multi-camera serving: 8 cameras multiplexed onto a 2-replica
+        # pool; derived = mean per-camera tracked mAP (coverage 1.0 and
+        # one tracker launch per tick asserted inside)
+        from benchmarks.nvr_bench import bench_nvr_row
+        r = bench_nvr_row(8, 24, rate=2.0, step_iters=3, step_reps=1)
+        print(f"nvr_8cam_serve,{r['serve_ms']*1e3:.0f},"
+              f"{r['map_mean']:.4f}")
+        print(f"# nvr n=8: interp={r['interpolated']} "
+              f"drop_cov={r['drop_coverage']:.3f} "
+              f"map_drop={r['map_drop_mean']:.4f} "
+              f"step_ms={r['step_ms']:.2f}")
 
     if "roofline" in names:
         try:

@@ -9,7 +9,8 @@ from .simulator import SimResult, simulate
 from .synchronizer import SequenceSynchronizer, SyncedFrame
 from .parallel import ParallelDetector, choose_n, n_range
 from .quality import (ProxyDetector, evaluate_map, evaluate_map_dets,
-                      evaluate_map_loop, track_quality)
+                      evaluate_map_loop, evaluate_streams,
+                      proxy_detect_fn_streams, track_quality)
 
 __all__ = [
     "BENCHMARK_VIDEOS", "ADL_RUNDLE_6", "ETH_SUNNYDAY", "Frame",
@@ -19,5 +20,6 @@ __all__ = [
     "WeightedRRScheduler", "make_scheduler", "SimResult", "simulate",
     "SequenceSynchronizer", "SyncedFrame", "ParallelDetector", "choose_n",
     "n_range", "ProxyDetector", "evaluate_map", "evaluate_map_dets",
-    "evaluate_map_loop", "track_quality",
+    "evaluate_map_loop", "evaluate_streams", "proxy_detect_fn_streams",
+    "track_quality",
 ]

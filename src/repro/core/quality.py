@@ -173,16 +173,47 @@ class ProxyDetector:
                 np.concatenate([scores[f][k], fp_sc[f][:m]]))
 
 
+class _IdentityFrameOf:
+    """rid -> (stream 0, frame rid): the single-stream ``frame_of``
+    mapping without materializing a dict."""
+
+    def __getitem__(self, rid):
+        return (0, int(rid))
+
+
 def proxy_detect_fn(video: SyntheticVideo, detector: ProxyDetector,
                     max_out: int = 24):
     """Bridge a ProxyDetector into ``serving.DetectionEngine``'s
     ``detect_fn`` interface: an ``(images, rids) -> (boxes, scores,
     classes, valid)`` callable that looks detections up by frame id
     (rid) instead of running the mini-SSD — the oracle detector the
-    engine tests and ``benchmarks/tracking_bench.py`` share."""
+    engine tests and ``benchmarks/tracking_bench.py`` share.  The
+    single-stream special case of ``proxy_detect_fn_streams`` (rid ==
+    frame index, one camera)."""
+    return proxy_detect_fn_streams({0: video}, {0: detector},
+                                   _IdentityFrameOf(), max_out)
+
+
+def proxy_detect_fn_streams(videos: Dict[int, SyntheticVideo],
+                            detectors: Dict[int, ProxyDetector],
+                            frame_of: Dict[int, tuple],
+                            max_out: int = 24):
+    """Multi-camera oracle for ``DetectionEngine.detect_fn``: ``rid`` is
+    globally unique across cameras, so ``frame_of`` maps it back to
+    ``(stream_id, per-stream frame index)`` and each camera's proxy
+    detector answers for its own video.  Batches are grouped per
+    detector so every model still pays one vectorized noise-synthesis
+    call per micro-batch."""
     def detect(images, rids):
         B = len(images)
-        detector.detect_many(video, [r for r in rids if r >= 0])
+        per_det: Dict[int, List[int]] = {}
+        for rid in rids:
+            if rid < 0:
+                continue
+            sid, k = frame_of[rid]
+            per_det.setdefault(sid, []).append(k)
+        for sid, ks in per_det.items():
+            detectors[sid].detect_many(videos[sid], ks)
         boxes = np.zeros((B, max_out, 4), np.float32)
         scores = np.zeros((B, max_out), np.float32)
         classes = np.zeros((B, max_out), np.int32)
@@ -190,14 +221,73 @@ def proxy_detect_fn(video: SyntheticVideo, detector: ProxyDetector,
         for i, rid in enumerate(rids):
             if rid < 0:                     # batch padding row
                 continue
-            d = detector.detect(video, int(rid))
-            k = min(len(d.boxes), max_out)
-            boxes[i, :k] = d.boxes[:k]
-            scores[i, :k] = d.scores[:k]
-            classes[i, :k] = d.classes[:k]
-            valid[i, :k] = True
+            sid, k = frame_of[rid]
+            d = detectors[sid].detect(videos[sid], k)
+            n = min(len(d.boxes), max_out)
+            boxes[i, :n] = d.boxes[:n]
+            scores[i, :n] = d.scores[:n]
+            classes[i, :n] = d.classes[:n]
+            valid[i, :n] = True
         return boxes, scores, classes, valid
     return detect
+
+
+@dataclass
+class _TrackedView:
+    """Minimal per-frame view for ``track_quality`` over engine
+    responses (index/boxes/track_ids triple)."""
+    index: int
+    boxes: np.ndarray
+    track_ids: np.ndarray
+
+
+def evaluate_streams(videos, streams: Dict[int, Sequence],
+                     n_frames: int, iou_thr: float = 0.5) -> Dict:
+    """Per-stream quality aggregation for multi-camera serving: each
+    camera's responses (the engine report's ``streams`` entry, ordered
+    by per-stream ``seq``) are scored independently against that
+    camera's video — mAP over the camera's arrival-frame sequence
+    (``evaluate_map_dets``; frames with no response still count in the
+    recall denominator) and tracker-identity counters
+    (``track_quality``) — plus cross-stream aggregates.
+
+    ``videos`` is either one ``SyntheticVideo`` shared by every camera
+    or a ``{stream_id: video}`` dict; EdgeNet-style accounting: compute
+    is shared, accuracy stays per-stream."""
+    per: Dict[int, Dict[str, float]] = {}
+    for sid, resp in streams.items():
+        video = videos[sid] if isinstance(videos, dict) else videos
+        dets: List = [None] * n_frames
+        tracked: List[_TrackedView] = []
+        for r in resp:
+            if not 0 <= r.seq < n_frames:
+                raise ValueError(
+                    f"stream {sid}: response rid={r.rid} has "
+                    f"seq={r.seq} outside [0, {n_frames}) — only "
+                    "engine-produced streams (DetectionEngine sets "
+                    "seq) or responses with seq set explicitly can "
+                    "be scored")
+            v = np.asarray(r.valid, bool)
+            d = Detections(np.asarray(r.boxes)[v],
+                           np.asarray(r.classes)[v],
+                           np.asarray(r.scores)[v])
+            dets[r.seq] = d
+            tids = (np.asarray(r.track_ids)[v]
+                    if r.track_ids is not None
+                    else np.full(int(v.sum()), -1, np.int64))
+            tracked.append(_TrackedView(r.seq, d.boxes, tids))
+        tq = track_quality(video, tracked, iou_thr)
+        per[sid] = {"map": evaluate_map_dets(video, dets, iou_thr), **tq}
+    maps = [v["map"] for v in per.values()]
+    covs = [v["coverage"] for v in per.values()]
+    return {
+        "per_stream": per,
+        "map_mean": float(np.mean(maps)) if maps else 0.0,
+        "map_min": float(np.min(maps)) if maps else 0.0,
+        "coverage_mean": float(np.mean(covs)) if covs else 0.0,
+        "id_switches_total": float(sum(v["id_switches"]
+                                       for v in per.values())),
+    }
 
 
 def responses_to_detections(responses, n_frames: int) -> List:

@@ -143,6 +143,8 @@ class WeightedRRScheduler(_Base):
         self._slots = self._expand()
         self.slot_idx = 0
         self.round_barrier = 0.0
+        self._round_done = 0.0           # latest t_done in the open round
+        self.rounds_completed = 0        # counts skip-crossings too
 
     def _default_weights(self):
         mus = np.array([e.mu_effective for e in self.executors])
@@ -178,25 +180,46 @@ class WeightedRRScheduler(_Base):
         return slots
 
     def assign(self, frame_idx, t):
-        j = self._slots[self.slot_idx]
-        ex = self.executors[j]
-        t_eff = max(t, self.round_barrier)
-        if ex.busy_until > t + 1.0 / ex.mu_effective:
-            return None                      # slot backlog -> drop
-        a = self._dispatch(j, frame_idx, t_eff)
-        self.slot_idx = (self.slot_idx + 1) % len(self._slots)
-        if self.slot_idx == 0:
-            self.round_barrier = max(e.busy_until for e in self.executors)
-        return a
+        # a backlogged slot is SKIPPED (it forfeits this turn), not a
+        # drop sentence for the whole stream: the old code returned None
+        # without advancing slot_idx, so one backlogged executor at the
+        # head slot dropped every subsequent arrival until its backlog
+        # cleared, no matter how idle the other devices were.  The frame
+        # is only dropped when every slot in the round is backlogged.
+        # The round barrier is the latest t_done dispatched WITHIN the
+        # round (equal to the old max-busy_until rule when nothing is
+        # skipped, but immune to a skipped executor's stale backlog).
+        nslots = len(self._slots)
+        barrier, round_done = self.round_barrier, self._round_done
+        rounds = 0                       # edges crossed, incl. by skips
+        for k in range(nslots):
+            idx = (self.slot_idx + k) % nslots
+            if idx == 0 and k > 0:       # the scan crossed a round edge
+                barrier, round_done, rounds = round_done, 0.0, rounds + 1
+            j = self._slots[idx]
+            ex = self.executors[j]
+            if ex.busy_until > t + 1.0 / ex.mu_effective:
+                continue                 # slot backlog -> try next slot
+            a = self._dispatch(j, frame_idx, max(t, barrier))
+            round_done = max(round_done, a.t_done)
+            self.slot_idx = (idx + 1) % nslots
+            if self.slot_idx == 0:
+                barrier, round_done, rounds = round_done, 0.0, rounds + 1
+            self.round_barrier, self._round_done = barrier, round_done
+            self.rounds_completed += rounds
+            return a
+        return None                      # every slot backlogged -> drop
 
     def blocking_assign(self, frame_idx, t: float = 0.0):
         j = self._slots[self.slot_idx]
         ex = self.executors[j]
         a = self._dispatch(j, frame_idx, max(self.round_barrier,
                                              ex.busy_until, t))
+        self._round_done = max(self._round_done, a.t_done)
         self.slot_idx = (self.slot_idx + 1) % len(self._slots)
         if self.slot_idx == 0:
-            self.round_barrier = max(e.busy_until for e in self.executors)
+            self.round_barrier, self._round_done = self._round_done, 0.0
+            self.rounds_completed += 1
         return a
 
 
@@ -207,22 +230,27 @@ class ProportionalScheduler(WeightedRRScheduler):
     def __init__(self, executors, update_period: int = 4, **kw):
         super().__init__(executors, weights=[1] * len(executors), **kw)
         self.update_period = update_period
-        self._rounds = 0
+        self._last_refresh = 0           # rounds_completed at last refresh
+
+    def _maybe_refresh(self):
+        # keyed off rounds_completed (which also counts rounds closed by
+        # skip-crossings) rather than slot_idx == 0: a round that ends
+        # because the scan skipped past the wrap point — exactly the
+        # backlogged-device case this policy exists for — still advances
+        # the reweighting clock
+        if self.rounds_completed - self._last_refresh >= self.update_period:
+            self._last_refresh = self.rounds_completed
+            self._refresh_weights()
 
     def assign(self, frame_idx, t):
         a = super().assign(frame_idx, t)
-        if self.slot_idx == 0 and a is not None:
-            self._rounds += 1
-            if self._rounds % self.update_period == 0:
-                self._refresh_weights()
+        if a is not None:
+            self._maybe_refresh()
         return a
 
     def blocking_assign(self, frame_idx, t: float = 0.0):
         a = super().blocking_assign(frame_idx, t)
-        if self.slot_idx == 0:
-            self._rounds += 1
-            if self._rounds % self.update_period == 0:
-                self._refresh_weights()
+        self._maybe_refresh()
         return a
 
     def _refresh_weights(self):

@@ -49,16 +49,20 @@ class SequenceSynchronizer:
         return out
 
     # ---- streaming interface ------------------------------------------
-    def stream(self, result: SimResult):
+    def stream(self, result: SimResult, tracked: bool = False):
         """Yield SyncedFrames in order as their detections become ready,
         respecting a bounded reorder window (emits a stale fill if a frame
-        hasn't completed by the time the window slides past it)."""
-        ordered = self.order(result)
-        pending = sorted(result.assignments, key=lambda a: a.t_done)
+        hasn't completed by the time the window slides past it).
+
+        ``tracked=True`` streams the ``order_tracked`` tagging (dropped
+        frames marked ``interpolated``); either way the flag is carried
+        through on the re-yielded frames instead of being reset."""
+        ordered = self.order_tracked(result) if tracked else self.order(result)
         emit_t = 0.0
         for sf in ordered:
             emit_t = max(emit_t, sf.t_ready)
-            yield SyncedFrame(sf.index, sf.source_index, sf.stale, emit_t)
+            yield SyncedFrame(sf.index, sf.source_index, sf.stale, emit_t,
+                              interpolated=sf.interpolated)
 
     def order_tracked(self, result: SimResult) -> List[SyncedFrame]:
         """Arrival-order output for the track-and-interpolate mode:
@@ -71,6 +75,31 @@ class SequenceSynchronizer:
         return [SyncedFrame(sf.index, sf.source_index, sf.stale,
                             sf.t_ready, interpolated=sf.stale)
                 for sf in self.order(result)]
+
+    # ---- multi-camera (NVR) interface ---------------------------------
+    @staticmethod
+    def order_per_stream(responses):
+        """Per-stream arrival-order emit for multi-camera serving: group
+        engine responses by ``stream_id``, re-establish each camera's
+        arrival order (``seq``), and attach a monotonic per-stream emit
+        clock (a frame is never released before an earlier frame of the
+        SAME stream — the reorder buffer is per camera, so one slow
+        camera never holds back another).
+
+        Returns ``{stream_id: (ordered_responses, emit_times)}``.
+        """
+        by_stream: Dict[int, List] = {}
+        for r in responses:
+            by_stream.setdefault(getattr(r, "stream_id", 0), []).append(r)
+        out = {}
+        for sid, rs in by_stream.items():
+            rs.sort(key=lambda r: (getattr(r, "seq", -1), r.rid))
+            emit_t, emits = 0.0, []
+            for r in rs:
+                emit_t = max(emit_t, r.t_done)
+                emits.append(emit_t)
+            out[sid] = (rs, emits)
+        return out
 
     def output_fps(self, result: SimResult) -> float:
         frames = self.order(result)

@@ -1,5 +1,19 @@
+"""Serving package: token (LLM) and video-frame (detection) payloads on
+the same parallel-replica scheduler machinery.
+
+``stream_id`` contract (multi-camera / NVR serving): every
+``FrameRequest`` carries a ``stream_id`` naming its camera (default 0);
+``rid`` stays globally unique across cameras.  ``DetectionEngine``
+interleaves all streams into shared micro-batches and — under
+``track_and_interpolate`` — one batched tracker (B = n_streams,
+lockstep, one launch per tick), returning per-stream order, coverage,
+FPS and drop accounting alongside the unchanged global report keys.
+See ``repro.serving.engine`` for the full contract.
+"""
 from .engine import (DetectionEngine, DetectionResponse, FrameRequest,
                      ReplicaExecutor, Request, Response, ServingEngine)
+from .nvr import make_nvr_streams
 
 __all__ = ["DetectionEngine", "DetectionResponse", "FrameRequest",
-           "Request", "Response", "ReplicaExecutor", "ServingEngine"]
+           "Request", "Response", "ReplicaExecutor", "ServingEngine",
+           "make_nvr_streams"]

@@ -9,6 +9,25 @@ runs, measured wall times drive the same virtual timeline as the edge
 simulator, and the sequence synchronizer returns responses in arrival
 order.  One engine, two payload kinds: token requests (LLM serving) and
 video frames (detection serving).
+
+Multi-camera (NVR) contract
+---------------------------
+``FrameRequest.stream_id`` tags which camera a frame belongs to
+(default 0 — the single-stream case).  ``rid`` stays globally unique
+across streams; a frame's position WITHIN its camera's stream (its
+per-stream arrival index) is derived by the engine and returned as
+``DetectionResponse.seq``.  All cameras share the same replicas,
+micro-batches and — under ``track_and_interpolate`` — ONE batched
+tracker with batch dim B = number of streams: frames from different
+cameras are interleaved into shared micro-batches (one fused detect +
+one fused NMS launch covers frames from several cameras), and the
+track table advances all streams in lockstep, one launch per tick.
+Ordering, drop accounting, coverage and FPS are all reported both
+globally (unchanged keys) and per stream (``per_stream`` /
+``streams``); per-stream emit clocks guarantee a camera's frames are
+released in that camera's arrival order, independent of the other
+cameras.  With a single stream the engine's outputs are bit-identical
+to the scalar-stream implementation.
 """
 from __future__ import annotations
 
@@ -21,6 +40,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core.scheduler import make_scheduler
+from ..core.synchronizer import SequenceSynchronizer
 from ..models import init_model
 from ..models.config import ModelConfig
 from ..runtime.steps import make_decode_step, make_prefill_step
@@ -39,6 +59,7 @@ class FrameRequest:
     rid: int
     image: np.ndarray             # (S, S, 3) float32
     t_arrival: float = 0.0
+    stream_id: int = 0            # which camera this frame belongs to
 
 
 @dataclass
@@ -54,6 +75,8 @@ class DetectionResponse:
     service_s: float
     interpolated: bool = False    # True: boxes coasted by the tracker
     track_ids: Optional[np.ndarray] = None
+    stream_id: int = 0            # camera this frame belongs to
+    seq: int = -1                 # per-stream arrival index of the frame
 
 
 @dataclass
@@ -139,6 +162,11 @@ class ServingEngine:
     def serve(self, requests: Sequence[Request]) -> Dict:
         """Run a batch of requests through the parallel-replica pipeline.
         Returns responses (arrival order), dropped ids, and FPS metrics."""
+        if not requests:                  # empty report, like DetectionEngine
+            return {"responses": [], "dropped": [], "throughput_rps": 0.0,
+                    "p50_latency": 0.0,
+                    "per_replica": {r.idx: r.n_processed
+                                    for r in self.replicas}}
         if not self._warm:
             self.warmup(max(len(r.tokens) for r in requests))
         responses: List[Response] = []
@@ -192,6 +220,13 @@ class DetectionEngine:
       (boxes, scores, classes, valid)`` callable (oracle detectors in
       tests/benchmarks); ``service_time`` pins the virtual per-frame
       service time so paced runs are deterministic.
+    * Multi-camera (NVR): tag requests with ``stream_id`` and the SAME
+      engine multiplexes every camera onto the shared replicas —
+      interleaved micro-batches, one batched tracker with B = number
+      of streams stepping all cameras in lockstep, and per-stream
+      coverage/FPS/drop accounting in the report (``per_stream``,
+      ``streams``).  B=1 results are bit-identical to the
+      single-stream engine.
     """
 
     def __init__(self, cfg=None, params=None, n_replicas: int = 4,
@@ -286,10 +321,21 @@ class DetectionEngine:
         drives the virtual-clock scheduler.  With ``drop_when_busy``,
         frames arriving into a full pipeline are dropped — and, with
         ``track_and_interpolate``, re-emitted with tracker-predicted
-        boxes so the output stream covers every arrival frame."""
+        boxes so the output stream covers every arrival frame.
+
+        Frames from several cameras (distinct ``stream_id``) interleave
+        into the SAME micro-batches and replicas; the report carries
+        per-stream coverage/FPS/drop accounting next to the global keys
+        (see the module docstring for the multi-camera contract)."""
         if not self._warm:
             self.warmup()
         frames = sorted(frames, key=lambda f: f.t_arrival)
+        # per-stream arrival index (seq): the k-th frame of each camera
+        n_frames_stream: Dict[int, int] = {}
+        seq_of: Dict[int, int] = {}
+        for f in frames:
+            seq_of[f.rid] = n_frames_stream.get(f.stream_id, 0)
+            n_frames_stream[f.stream_id] = seq_of[f.rid] + 1
         responses: List[DetectionResponse] = []
         dropped: List[FrameRequest] = []
         pad_to = self.micro_batch or None     # fixed mode: one jit shape
@@ -333,13 +379,36 @@ class DetectionEngine:
             for j, (f, a) in enumerate(zip(kept, assigns)):
                 responses.append(DetectionResponse(
                     f.rid, boxes[j], scores[j], classes[j], valid[j],
-                    a.executor_idx, a.t_start, a.t_done, per_frame))
+                    a.executor_idx, a.t_start, a.t_done, per_frame,
+                    stream_id=f.stream_id, seq=seq_of[f.rid]))
         interpolated = 0
+        self._tracker_launches = self._tracker_ticks = 0
         if self.track_and_interpolate and (dropped or responses):
             responses = self._interpolate(frames, responses)
             interpolated = sum(r.interpolated for r in responses)
         responses.sort(key=lambda r: r.rid)       # sequence synchronizer
         makespan = max((r.t_done for r in responses), default=0.0)
+        # per-stream reorder + drop accounting (the per-camera view of
+        # the same responses; one entry per stream_id seen in the input)
+        ordered = SequenceSynchronizer.order_per_stream(responses)
+        streams, emit_t = {}, {}
+        for sid, (rs, emits) in ordered.items():
+            streams[sid], emit_t[sid] = rs, emits
+        drop_stream: Dict[int, int] = {}
+        for f in dropped:
+            drop_stream[f.stream_id] = drop_stream.get(f.stream_id, 0) + 1
+        per_stream = {}
+        for sid, n in n_frames_stream.items():
+            rs = streams.setdefault(sid, [])
+            emits = emit_t.setdefault(sid, [])
+            mk = emits[-1] if emits else 0.0   # per-stream emit makespan
+            per_stream[sid] = {
+                "frames": n,
+                "dropped": drop_stream.get(sid, 0),
+                "interpolated": sum(r.interpolated for r in rs),
+                "coverage": len(rs) / max(n, 1),
+                "throughput_fps": len(rs) / max(mk, 1e-9),
+            }
         return {
             "responses": responses,
             "dropped": [f.rid for f in dropped],
@@ -347,37 +416,85 @@ class DetectionEngine:
             "interpolated": interpolated,
             "throughput_fps": len(responses) / max(makespan, 1e-9),
             "per_replica": {r.idx: r.n_processed for r in self.replicas},
+            "n_streams": len(n_frames_stream),
+            "streams": streams,
+            "emit_t": emit_t,    # per-stream monotonic release clocks
+            "per_stream": per_stream,
+            "tracker_launches": self._tracker_launches,
+            "tracker_ticks": self._tracker_ticks,
         }
 
     def _interpolate(self, frames, responses) -> List[DetectionResponse]:
-        """Tracker pass in arrival order: processed frames feed the
-        track table (and get their detections' track ids attached);
-        dropped frames are re-emitted with the coasted prediction,
-        tagged ``interpolated``, ready no earlier than the newest
-        detection they extrapolate from."""
+        """ONE batched tracker over every camera stream, advanced in
+        lockstep: tick k covers each stream's k-th arrival frame, and
+        the whole (B, T) track table moves with a single ``trk.step``
+        launch per tick.  Streams whose tick-k frame was processed feed
+        the associate/update/birth path; streams whose frame was
+        dropped — or that have no frame left — are passed an
+        all-invalid detection row, which is bit-identical to coasting
+        (every lifecycle write is masked by match/birth bits that an
+        invalid row can never set).  Dropped frames are re-emitted with
+        the coasted prediction, tagged ``interpolated``, ready no
+        earlier than the newest detection of the SAME stream they
+        extrapolate from (per-stream emit clocks: one slow camera never
+        delays another's output)."""
         from .. import tracking as trk
         cfg = self.tracker_cfg
-        state = trk.init_state(1, cfg)
+        per: Dict[int, List[FrameRequest]] = {}
+        for f in frames:                    # frames sorted by arrival
+            per.setdefault(f.stream_id, []).append(f)
+        sids = sorted(per)
+        row = {s: b for b, s in enumerate(sids)}
+        B = len(sids)
+        state = trk.init_state(B, cfg)
         by_rid = {r.rid: r for r in responses}
+        D = responses[0].boxes.shape[0] if responses else 1
+        emit_t = {s: 0.0 for s in sids}
+        ticks = max(len(v) for v in per.values())
+        launches = 0
         out: List[DetectionResponse] = []
-        emit_t = 0.0
-        for f in frames:
-            r = by_rid.get(f.rid)
-            if r is not None:
+        for k in range(ticks):
+            tick = [(s, per[s][k] if k < len(per[s]) else None)
+                    for s in sids]
+            resp = {s: by_rid.get(f.rid) if f is not None else None
+                    for s, f in tick}
+            det_tid = None
+            if any(r is not None for r in resp.values()):
+                boxes = np.zeros((B, D, 4), np.float32)
+                scores = np.zeros((B, D), np.float32)
+                classes = np.zeros((B, D), np.int32)
+                valid = np.zeros((B, D), bool)
+                for s, r in resp.items():
+                    if r is not None:
+                        b = row[s]
+                        boxes[b], scores[b] = r.boxes, r.scores
+                        classes[b], valid[b] = r.classes, r.valid
                 state, det_tid = trk.step(
-                    state, jnp.asarray(r.boxes[None]),
-                    jnp.asarray(r.scores[None]),
-                    jnp.asarray(r.classes[None], jnp.int32),
-                    jnp.asarray(r.valid[None]), cfg)
-                r.track_ids = np.asarray(det_tid)[0]
-                emit_t = max(emit_t, r.t_done)
-                out.append(r)
-            else:
+                    state, jnp.asarray(boxes), jnp.asarray(scores),
+                    jnp.asarray(classes), jnp.asarray(valid), cfg)
+                det_tid = np.asarray(det_tid)
+            else:                           # no stream saw a detection
                 state = trk.coast(state, cfg)
-                b, s, c, tid, emit = (np.asarray(a) for a in
-                                      trk.output(state, cfg))
-                t_ready = max(emit_t, f.t_arrival)
-                out.append(DetectionResponse(
-                    f.rid, b[0], s[0], c[0], emit[0], -1, t_ready,
-                    t_ready, 0.0, interpolated=True, track_ids=tid[0]))
+            launches += 1
+            coasted = None                  # lazy: only if a drop needs it
+            for s, f in tick:
+                if f is None:
+                    continue
+                r, b = resp[s], row[s]
+                if r is not None:
+                    r.track_ids = det_tid[b]
+                    emit_t[s] = max(emit_t[s], r.t_done)
+                    out.append(r)
+                else:
+                    if coasted is None:
+                        coasted = tuple(np.asarray(a) for a in
+                                        trk.output(state, cfg))
+                    tb, ts, tc, tid, emit = coasted
+                    t_ready = max(emit_t[s], f.t_arrival)
+                    out.append(DetectionResponse(
+                        f.rid, tb[b], ts[b], tc[b], emit[b], -1, t_ready,
+                        t_ready, 0.0, interpolated=True,
+                        track_ids=tid[b], stream_id=s, seq=k))
+        self._tracker_launches = launches
+        self._tracker_ticks = ticks
         return out

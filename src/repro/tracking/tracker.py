@@ -18,7 +18,12 @@ are all masked array updates inside one jitted ``step``:
   birth    — unmatched detections land in free slots via the same
              exclusive-cumsum rank trick the NMS kernel uses for slot
              assignment (k-th unmatched detection -> k-th free slot),
-             so birth is O(T·D) vectorized, not a Python scan.
+             so birth is O(T·D) vectorized, not a Python scan.  When
+             unmatched detections outnumber free slots, the
+             lowest-score COASTING tracks are evicted to make room
+             (overflow eviction); only a table whose every slot
+             matched a detection this frame — nothing safe to evict —
+             still drops the overflow birth with ``det_tid = -1``.
 
 ``output`` emits the confirmed, alive slots — the boxes a dropped frame
 gets instead of nothing.
@@ -137,6 +142,25 @@ def step(state: TrackerState, boxes, scores, classes, valid,
                     matched[..., None], axis=1)              # (B, D)
     unmatched = valid & ~taken & (scores >= cfg.birth_score_thr)
     free = ~state.active
+
+    # ---------------------------------------------- overflow eviction
+    # When unmatched detections outnumber free slots, births used to be
+    # silently dropped (det_tid stayed -1 with no signal).  Instead the
+    # lowest-score COASTING tracks (active but unmatched this frame)
+    # give up exactly the missing slots; every evicted slot is
+    # guaranteed to be reborn below, because the eviction count never
+    # exceeds n_unmatched - n_free.  With no overflow ``need`` is 0 and
+    # this whole block is the identity.
+    need = jnp.maximum(jnp.sum(unmatched, -1) - jnp.sum(free, -1),
+                       0)[:, None]                           # (B, 1)
+    evictable = state.active & ~matched
+    # ascending-score rank among evictable slots (ties -> lower index
+    # first): double stable argsort = rank, O(T log T) — non-evictable
+    # slots sort last behind +inf keys and are masked out anyway
+    key = jnp.where(evictable, state.score, jnp.inf)
+    rank = jnp.argsort(jnp.argsort(key, axis=-1), axis=-1)   # (B, T)
+    evict = evictable & (rank < need)
+    free = free | evict
     d_rank = jnp.cumsum(unmatched, -1) - unmatched           # excl. rank
     t_rank = jnp.cumsum(free, -1) - free
     pair = (free[:, :, None] & unmatched[:, None, :] &
@@ -159,7 +183,7 @@ def step(state: TrackerState, boxes, scores, classes, valid,
     next_id = state.next_id + jnp.sum(birth, -1, dtype=jnp.int32)
     hits = jnp.where(birth, 1, hits)
     tsu = jnp.where(birth, 0, tsu)
-    active = state.active | birth
+    active = (state.active & ~evict) | birth
 
     # which track id each detection landed on (matched or newborn)
     m_onehot = (match[..., None] == darange[None, None]) & matched[..., None]

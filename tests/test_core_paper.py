@@ -225,6 +225,59 @@ def test_wrr_expansion_interleaves_weight_one_executors():
                            for a, b in zip(round2, round2[1:]))
 
 
+def test_wrr_skips_backlogged_slot_instead_of_dropping():
+    """Regression: ``assign`` returning None never advanced
+    ``slot_idx``, so one backlogged executor at the head slot dropped
+    EVERY subsequent arrival until its backlog cleared — even with the
+    other executors idle.  A backlogged slot must forfeit its turn
+    (skip to the next slot within the round), and a frame is dropped
+    only when every slot is backlogged."""
+    def fresh(n=2):
+        execs = [DetectorExecutor(DEVICE_PROFILES["ncs2"],
+                                  MODEL_PROFILES["yolov3"])
+                 for _ in range(n)]
+        return execs, make_scheduler("wrr", execs, weights=[1] * n)
+
+    execs, wrr = fresh()
+    head = wrr._slots[0]
+    other = wrr._slots[1]
+    execs[head].busy_until = 100.0       # deep backlog on the head slot
+    for i in range(5):                   # paced at the healthy device's mu
+        a = wrr.assign(i, t=0.4 * i)
+        assert a is not None, f"frame {i} head-of-line dropped"
+        assert a.executor_idx == other
+    # every slot backlogged -> the frame really is dropped, and the
+    # round position is left where it was
+    execs, wrr = fresh()
+    for e in execs:
+        e.busy_until = 100.0
+    idx_before = wrr.slot_idx
+    assert wrr.assign(0, t=0.0) is None
+    assert wrr.slot_idx == idx_before
+
+
+def test_proportional_skips_backlogged_slot():
+    """The same head-of-line fix must hold through the Proportional
+    subclass (heterogeneous speeds: a slow device's backlog must not
+    starve the fast ones)."""
+    execs = [DetectorExecutor(DEVICE_PROFILES["slow_cpu"],
+                              MODEL_PROFILES["yolov3"]),
+             DetectorExecutor(DEVICE_PROFILES["fast_cpu"],
+                              MODEL_PROFILES["yolov3"])]
+    sched = make_scheduler("proportional", execs)
+    slow_slot = 0
+    execs[slow_slot].busy_until = 50.0
+    got = [sched.assign(i, t=0.2 * i) for i in range(8)]
+    assert all(a is not None for a in got)
+    assert all(a.executor_idx == 1 for a in got)
+    # rounds closed by skip-crossings still advance the reweighting
+    # clock: with the backlogged device forfeiting every turn, the
+    # EWMA-based weight refresh must still fire (it used to be keyed
+    # off a slot_idx==0 condition such rounds could never satisfy)
+    assert sched.rounds_completed >= sched.update_period
+    assert sched._last_refresh >= sched.update_period
+
+
 # ----------------------------------------- heterogeneous detection models
 def test_heterogeneous_models_per_device():
     """Paper §III-A third design alternative: different detector models on

@@ -49,6 +49,17 @@ def test_replica_scaling_increases_throughput(cfg):
     assert rates[4] > 2.0 * rates[1]
 
 
+def test_serve_empty_request_list(cfg):
+    """Regression: ``serve([])`` used to crash in ``warmup`` on
+    ``max()`` over an empty sequence; it must return an empty report,
+    mirroring ``DetectionEngine``."""
+    eng = ServingEngine(cfg, n_replicas=2, scheduler="fcfs", cache_len=32)
+    out = eng.serve([])
+    assert out["responses"] == [] and out["dropped"] == []
+    assert out["throughput_rps"] == 0.0 and out["p50_latency"] == 0.0
+    assert set(out["per_replica"]) == {0, 1}
+
+
 def test_drop_when_busy_mode(cfg):
     eng = ServingEngine(cfg, n_replicas=1, scheduler="fcfs", cache_len=32,
                         drop_when_busy=True)

@@ -63,6 +63,25 @@ def test_leading_drops_have_no_source():
     assert [s.interpolated for s in tagged] == [True] * 3 + [False] * 2
 
 
+def test_stream_preserves_interpolated_tagging():
+    """Regression: ``stream`` re-yielded frames with the default
+    ``interpolated=False`` (dropping the flag) — with ``tracked=True``
+    it must emit the same tagging as ``order_tracked`` while keeping
+    the monotonic emit clock."""
+    a = [Assignment(0, 0, 0.0, 0.6), Assignment(2, 0, 0.6, 0.8)]
+    r = _result(a, [1, 3], 4)
+    sync = SequenceSynchronizer()
+    tagged = sync.order_tracked(r)
+    streamed = list(sync.stream(r, tracked=True))
+    assert [s.interpolated for s in streamed] == \
+        [s.interpolated for s in tagged] == [False, True, False, True]
+    assert [s.stale for s in streamed] == [s.stale for s in tagged]
+    emits = [s.t_ready for s in streamed]
+    assert emits == sorted(emits)
+    # the untracked path still reports no interpolation
+    assert all(not s.interpolated for s in sync.stream(r))
+
+
 def test_everything_dropped():
     r = _result([], list(range(5)), 5)
     sync = SequenceSynchronizer()

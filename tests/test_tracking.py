@@ -151,6 +151,55 @@ def test_capacity_overflow_is_masked():
     assert (np.asarray(det_tid)[0] >= 0).sum() == 2
 
 
+def test_full_table_evicts_lowest_score_coasting_track():
+    """Regression: with zero free slots, new detections were silently
+    dropped (det_tid -1, no birth).  Now the lowest-score COASTING
+    track is evicted to make room, matched tracks are never touched,
+    and the newborn claims the evicted slot."""
+    cfg = TrackerConfig(capacity=3, iou_thr=0.3, min_hits=1)
+    state = init_state(1, cfg)
+    # fill the table: three tracks with distinct scores
+    boxes = np.zeros((1, 3, 4), np.float32)
+    for d, (x, s) in enumerate(zip((0, 200, 400), (0.9, 0.4, 0.7))):
+        boxes[0, d] = [x, 0, x + 20, 30]
+    scores = np.asarray([[0.9, 0.4, 0.7]], np.float32)
+    classes = np.zeros((1, 3), np.int32)
+    valid = np.ones((1, 3), bool)
+    state, _ = step(state, jnp.asarray(boxes), jnp.asarray(scores),
+                    jnp.asarray(classes), jnp.asarray(valid), cfg)
+    assert int(state.active.sum()) == 3          # table full
+    # next frame: tracks 0 and 2 re-match, track 1 (score 0.4) coasts,
+    # and a brand-new detection arrives with nowhere to go
+    boxes2 = np.zeros((1, 3, 4), np.float32)
+    boxes2[0, 0] = [2, 0, 22, 30]
+    boxes2[0, 1] = [402, 0, 422, 30]
+    boxes2[0, 2] = [800, 0, 820, 30]             # the overflow birth
+    scores2 = np.asarray([[0.9, 0.7, 0.95]], np.float32)
+    state, det_tid = step(state, jnp.asarray(boxes2),
+                          jnp.asarray(scores2), jnp.asarray(classes),
+                          jnp.asarray(valid), cfg)
+    tids = np.asarray(det_tid)[0]
+    assert (tids >= 0).all()                     # nothing dropped
+    assert tids[2] == 3                          # fresh id for the birth
+    live = set(np.asarray(state.track_id)[0][np.asarray(state.active)[0]])
+    assert live == {0, 2, 3}                     # score-0.4 coaster evicted
+    # a full table of MATCHED tracks still never evicts (no coasters)
+    state2 = init_state(1, cfg)
+    state2, _ = step(state2, jnp.asarray(boxes), jnp.asarray(scores),
+                     jnp.asarray(classes), jnp.asarray(valid), cfg)
+    big = np.zeros((1, 4, 4), np.float32)
+    big[0, :3] = boxes[0] + 1.0
+    big[0, 3] = [800, 0, 820, 30]
+    sc = np.asarray([[0.9, 0.4, 0.7, 0.95]], np.float32)
+    state2, tid2 = step(state2, jnp.asarray(big), jnp.asarray(sc),
+                        jnp.zeros((1, 4), jnp.int32),
+                        jnp.ones((1, 4), bool), cfg)
+    assert int(np.asarray(tid2)[0, 3]) == -1     # overflow, no coaster
+    live2 = set(np.asarray(state2.track_id)[0]
+                [np.asarray(state2.active)[0]])
+    assert live2 == {0, 1, 2}
+
+
 # -------------------------------------------- interpolation quality
 def test_interpolated_map_beats_stale_reuse():
     """The acceptance bar: on the synthetic benchmark video, filling
