@@ -1,0 +1,233 @@
+"""Sharded multi-host NVR serving trajectory: a fixed camera set spread
+over 1..N mesh shards, each shard its own replica pool + lockstep
+tracker, detection running as ONE SPMD program on the host mesh.
+
+  PYTHONPATH=src python benchmarks/sharded_bench.py [--smoke] [--out PATH]
+
+Forces ``xla_force_host_platform_device_count`` BEFORE the first jax
+import so the host exposes a real multi-device mesh (CPU smoke stand-in
+for multi-host; interpret the step latencies as trajectory, not TPU
+projections).  Emits ``BENCH_sharded.json`` with one row per shard
+count:
+
+* ``coverage``          — MIN per-stream coverage under
+  ``track_and_interpolate`` (asserted 1.0 for every row);
+* ``tracker_step_ms``   — lockstep tracker step at
+  ``B = cameras-per-shard`` (the per-tick launch each shard issues;
+  sharding shrinks B, which is where the step-latency win comes from);
+* ``spmd_detect_ms``    — the shared detect+NMS program on an
+  ``n_shards``-device mesh at the engine's micro-batch size;
+* ``map_mean``/``map_min`` — per-stream tracked mAP after the merge
+  (scored by ``core.quality.evaluate_streams``, unchanged);
+* ``serve_ms``          — wall time of the whole sharded serve call.
+
+Acceptance (all measured here, not trusted): every row full coverage,
+single-shard report bit-identical to ``DetectionEngine``, SPMD detect
+bit-compatible with the plain jitted path, and the per-shard tracker
+step at the largest shard count beating the unsharded one.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+from pathlib import Path
+
+N_DEVICES = 8
+if __name__ == "__main__":
+    # standalone invocation only: must precede the first jax import to
+    # take effect, and must NOT leak into processes that merely import
+    # bench_shard_row (benchmarks/run.py — jax already initialized
+    # there, so the flag could only confuse child processes)
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "")
+        + f" --xla_force_host_platform_device_count={N_DEVICES}")
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+import jax
+import numpy as np
+
+
+def best_of(f, iters, reps):
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            f()
+        best = min(best, (time.perf_counter() - t0) / iters)
+    return best * 1e3
+
+
+def bench_spmd_detect(n_shards, mb, iters, reps):
+    """The shared SPMD detect+NMS program on an n-shard mesh, plus a
+    bit-compat check against the engine's own meshless jit path."""
+    import jax.numpy as jnp
+
+    from repro.detector import (SSDConfig, decode_detections, init_ssd,
+                                make_anchors)
+    from repro.launch.mesh import make_serving_mesh
+    from repro.serving import make_spmd_detect
+
+    cfg = SSDConfig()
+    params = init_ssd(cfg, jax.random.PRNGKey(0))
+    # clamp to the visible devices: when jax was initialized before our
+    # XLA_FLAGS took effect (benchmarks/run.py importing this module),
+    # the micro-bench degrades to the 1-device mesh instead of failing
+    n_shards = min(n_shards, len(jax.devices()))
+    mesh = make_serving_mesh(n_shards)
+    detect = make_spmd_detect(cfg, params, mesh)
+    anchors = jnp.asarray(make_anchors(cfg))
+    plain = jax.jit(lambda im: decode_detections(params, cfg, im, anchors))
+    imgs = np.random.default_rng(0).random((mb, 64, 64, 3)) \
+        .astype(np.float32)
+    spmd_out = [np.asarray(a) for a in detect(imgs)]   # compile + warm
+    plain_out = [np.asarray(a) for a in
+                 jax.block_until_ready(plain(jnp.asarray(imgs)))]
+    # partitioned convs may differ from the meshless program by a ulp
+    # in box coords (different XLA fusion per shard); the DECISIONS —
+    # classes, suppression survivors — must be identical, and a
+    # 1-device mesh must be bit-exact (the constraints are no-ops)
+    max_diff = max(float(np.max(np.abs(
+        a.astype(np.float64) - b.astype(np.float64))))
+        for a, b in zip(spmd_out[:2], plain_out[:2]))
+    decisions = (np.array_equal(spmd_out[2], plain_out[2])
+                 and np.array_equal(spmd_out[3], plain_out[3]))
+    matches = decisions and (max_diff == 0.0 if n_shards == 1
+                             else max_diff < 1e-6)
+    ms = best_of(lambda: detect(imgs), iters, reps)
+    return ms, matches, max_diff
+
+
+def single_shard_bit_identical(frames, oracle, **kw):
+    from repro.serving import DetectionEngine, ShardedDetectionEngine
+    base = DetectionEngine(detect_fn=oracle, **kw).serve(frames)
+    sh = ShardedDetectionEngine(n_shards=1, detect_fn=oracle,
+                                **kw).serve(frames)
+    same = len(base["responses"]) == len(sh["responses"]) and all(
+        ra.rid == rb.rid and ra.t_done == rb.t_done
+        and np.array_equal(ra.boxes, rb.boxes)
+        and np.array_equal(ra.valid, rb.valid)
+        for ra, rb in zip(base["responses"], sh["responses"]))
+    scalars = all(base[k] == sh[k] for k in
+                  ("coverage", "interpolated", "throughput_fps",
+                   "dropped", "per_replica", "tracker_launches"))
+    return same and scalars
+
+
+def bench_shard_row(n_shards, n_streams, n_frames, rate, iters, reps):
+    from benchmarks.tracking_bench import bench_step
+    from repro.core import evaluate_streams, proxy_detect_fn_streams
+    from repro.serving import ShardedDetectionEngine, make_nvr_streams
+
+    frames, frame_of, videos, dets = make_nvr_streams(n_streams,
+                                                      n_frames, rate)
+    oracle = proxy_detect_fn_streams(videos, dets, frame_of)
+    eng = ShardedDetectionEngine(
+        n_shards=n_shards, detect_fn=oracle, n_replicas=2,
+        service_time=0.4, track_and_interpolate=True)
+    t0 = time.perf_counter()
+    out = eng.serve(frames)
+    serve_ms = (time.perf_counter() - t0) * 1e3
+    cov_min = min(v["coverage"] for v in out["per_stream"].values())
+    assert cov_min == 1.0, cov_min
+    assert out["n_shards"] == n_shards
+    q = evaluate_streams(videos, out["streams"], n_frames)
+    cams_per_shard = max(len(s["streams"]) for s in out["per_shard"])
+    step = bench_step(cams_per_shard, 24, iters, reps)
+    mb = eng.engines[0].max_micro_batch
+    spmd_ms, spmd_ok, spmd_diff = bench_spmd_detect(n_shards, mb,
+                                                    iters, reps)
+    return {
+        "n_shards": n_shards,
+        "cameras": n_streams,
+        "cameras_per_shard": cams_per_shard,
+        "frames_per_stream": n_frames,
+        "coverage": cov_min,
+        "interpolated": out["interpolated"],
+        "tracker_launches": out["tracker_launches"],
+        "map_mean": round(q["map_mean"], 4),
+        "map_min": round(q["map_min"], 4),
+        "id_switches_total": q["id_switches_total"],
+        "tracker_step_ms": step["step_ms"],
+        "spmd_detect_ms": round(spmd_ms, 3),
+        "spmd_matches_plain": spmd_ok,
+        "spmd_max_abs_diff": spmd_diff,
+        "serve_ms": round(serve_ms, 1),
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny stream lengths / single rep (CI)")
+    ap.add_argument("--out", default=str(
+        Path(__file__).resolve().parents[1] / "BENCH_sharded.json"))
+    args = ap.parse_args()
+
+    from repro.core import proxy_detect_fn_streams
+    from repro.serving import make_nvr_streams
+
+    if args.smoke:
+        # the step-timing acceptance gate compares two sub-ms
+        # measurements, so even smoke keeps enough best-of reps to
+        # ride out shared-runner scheduling noise (30 calls ~ tens of
+        # ms; the B=4 vs B=2 gap is ~1.7x, far above best-of jitter)
+        shard_counts, n_streams, n_frames, iters, reps = \
+            (1, 2), 4, 16, 10, 3
+    else:
+        shard_counts, n_streams, n_frames, iters, reps = \
+            (1, 2, 4), 8, 48, 20, 5
+
+    rows = [bench_shard_row(n, n_streams, n_frames, rate=2.0,
+                            iters=iters, reps=reps)
+            for n in shard_counts]
+
+    frames, frame_of, videos, dets = make_nvr_streams(n_streams,
+                                                      n_frames, rate=2.0)
+    oracle = proxy_detect_fn_streams(videos, dets, frame_of)
+    bit_identical = single_shard_bit_identical(
+        frames, oracle, n_replicas=2, service_time=0.4,
+        track_and_interpolate=True)
+
+    out = {
+        "bench": "sharded_nvr_serving",
+        "backend": jax.default_backend(),
+        "devices": len(jax.devices()),
+        "smoke": bool(args.smoke),
+        "pool": {"cameras": n_streams, "frames_per_stream": n_frames,
+                 "stream_rate_fps": 2.0, "n_replicas_per_shard": 2,
+                 "service_time_s": 0.4},
+        "rows": rows,
+        "acceptance": {
+            "per_stream_coverage_all_one": all(
+                r["coverage"] == 1.0 for r in rows),
+            "single_shard_bit_identical_to_detection_engine":
+                bit_identical,
+            # bit-exact on the 1-device mesh, decision-exact (classes /
+            # survivors) and <1e-6 box drift on multi-device meshes
+            "spmd_detect_matches_plain_path": all(
+                r["spmd_matches_plain"] for r in rows),
+            "mesh_spans_multiple_shards": any(
+                r["n_shards"] >= 2 for r in rows)
+                and len(jax.devices()) >= 2,
+            # sharding shrinks the per-shard tracker batch B, so the
+            # per-tick lockstep launch gets cheaper with shard count
+            "tracker_step_scales_with_sharding":
+                rows[-1]["tracker_step_ms"] < rows[0]["tracker_step_ms"],
+        },
+    }
+    Path(args.out).write_text(json.dumps(out, indent=2) + "\n")
+    print(json.dumps(out, indent=2))
+    if not all(out["acceptance"].values()):
+        failed = [k for k, v in out["acceptance"].items() if not v]
+        print(f"ACCEPTANCE FAILED: {failed}", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

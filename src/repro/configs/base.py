@@ -51,7 +51,7 @@ def get_config(arch: str, preset: str = "full",
 
 def supported_shapes(cfg: ModelConfig, variant: Optional[str] = None):
     """Which of the four shapes this (arch, variant) runs — with skips as
-    documented in DESIGN.md §Arch-applicability."""
+    documented on each config module."""
     out = ["train_4k", "prefill_32k"]
     if cfg.encoder_only:
         return out                       # encoder-only: no decode step

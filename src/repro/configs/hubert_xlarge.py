@@ -5,7 +5,7 @@ targets).  The mel/conv feature extractor is a stub: ``input_specs`` feeds
 precomputed frame embeddings (frontend_dim=512, the wav2vec2 conv output
 width).  Positional information: we use RoPE in place of HuBERT's
 convolutional relative positional embedding (stub-frontend carve-out;
-recorded in DESIGN.md).  Encoder-only ⇒ no decode shapes.
+recorded here).  Encoder-only ⇒ no decode shapes.
 """
 from repro.models.config import ModelConfig, dense_stages
 

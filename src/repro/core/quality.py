@@ -1,7 +1,7 @@
 """Detection quality model + real mAP evaluation.
 
-MOT-15 videos and pretrained SSD/YOLO weights are not available offline
-(DESIGN.md §7), so detection outputs come from a *proxy detector*: a
+MOT-15 videos and pretrained SSD/YOLO weights are not available
+offline, so detection outputs come from a *proxy detector*: a
 well-trained detector is modelled as ground truth + localization jitter +
 misses + false positives, with noise levels per model class (SSD300 is
 noisier than YOLOv3, matching the paper's mAP ordering).  The mAP math
@@ -253,7 +253,13 @@ def evaluate_streams(videos, streams: Dict[int, Sequence],
 
     ``videos`` is either one ``SyntheticVideo`` shared by every camera
     or a ``{stream_id: video}`` dict; EdgeNet-style accounting: compute
-    is shared, accuracy stays per-stream."""
+    is shared, accuracy stays per-stream.
+
+    Sharded serving needs no variant of this function: streams are
+    disjoint across shards, so the ``streams`` key of a merged
+    ``ShardedDetectionEngine`` report scores identically to the
+    per-shard reports scored separately — per-stream quality is
+    invariant to WHICH shard served a camera."""
     per: Dict[int, Dict[str, float]] = {}
     for sid, resp in streams.items():
         video = videos[sid] if isinstance(videos, dict) else videos

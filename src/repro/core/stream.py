@@ -1,6 +1,6 @@
 """Video stream model: frames arriving at λ FPS, plus a synthetic benchmark
 video generator with moving-object ground truth (stands in for the MOT-15
-clips, which are not available offline; see DESIGN.md §7).
+clips, which are not available offline).
 
 The two benchmark specs mirror the paper's Table I:
   ADL-Rundle-6 : 30 FPS, 525 frames, 1920x1080, static camera

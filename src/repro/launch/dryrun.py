@@ -24,7 +24,7 @@ from repro.hlo import collective_bytes_from_hlo, hlo_cost_from_text       # noqa
 OUT_DIR = Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
 
 # long_500k needs sub-quadratic attention: SSM/hybrid run natively; the
-# full-attention archs run the sliding-window variant (DESIGN.md).
+# full-attention archs run the sliding-window variant.
 NATIVE_LONG = {"rwkv6-3b", "jamba-v0.1-52b"}
 
 

@@ -4,6 +4,15 @@ via dryrun.py).
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-4b \\
       --n-replicas 4 --scheduler fcfs --requests 24
+
+``--payload frames`` switches to the detection/NVR path: a synthetic
+multi-camera trace served by ``ShardedDetectionEngine`` on a
+``make_serving_mesh`` host mesh (``--shards`` > available devices falls
+back to the meshless Python partition with a warning; force devices
+with XLA_FLAGS=--xla_force_host_platform_device_count=N).
+
+  PYTHONPATH=src python -m repro.launch.serve --payload frames \\
+      --shards 2 --cameras 8 --frames 24
 """
 from __future__ import annotations
 
@@ -11,20 +20,79 @@ import argparse
 
 import numpy as np
 
-from repro.configs import ARCH_IDS, get_config
-from repro.serving import Request, ServingEngine
+
+def serve_frames(args):
+    """Serve-mode mesh entry point for sharded NVR detection."""
+    import jax
+
+    from repro.core import evaluate_streams, proxy_detect_fn_streams
+    from repro.launch.mesh import make_serving_mesh
+    from repro.serving import ShardedDetectionEngine, make_nvr_streams
+
+    frames, frame_of, videos, dets = make_nvr_streams(
+        args.cameras, args.frames, args.rate)
+    mesh = None
+    if args.spmd:
+        if args.shards <= len(jax.devices()):
+            mesh = make_serving_mesh(args.shards)
+        else:
+            print(f"# {args.shards} shards > {len(jax.devices())} devices: "
+                  "meshless fallback (set XLA_FLAGS=--xla_force_host_"
+                  "platform_device_count to get a real mesh)")
+    kw = dict(n_shards=args.shards, n_replicas=args.n_replicas,
+              scheduler=args.scheduler, track_and_interpolate=True)
+    if mesh is not None:
+        eng = ShardedDetectionEngine(mesh=mesh, **kw)
+        # the SPMD path runs the real mini-SSD: give it real-sized
+        # images (the oracle trace carries 4x4 placeholders)
+        size = eng.cfg.image_size
+        rng = np.random.default_rng(0)
+        for f in frames:
+            f.image = rng.random((size, size, 3)).astype(np.float32)
+    else:                      # oracle fallback: per-camera proxy detectors
+        eng = ShardedDetectionEngine(
+            detect_fn=proxy_detect_fn_streams(videos, dets, frame_of),
+            service_time=0.4, **kw)
+    out = eng.serve(frames)
+    q = evaluate_streams(videos, out["streams"], args.frames) \
+        if mesh is None else None
+    print(f"payload=frames shards={out['n_shards']} "
+          f"cameras={out['n_streams']} spmd={mesh is not None}")
+    print(f"coverage={out['coverage']:.3f} "
+          f"interpolated={out['interpolated']} "
+          f"throughput={out['throughput_fps']:.2f} fps")
+    for h, shard in enumerate(out["per_shard"]):
+        print(f"  shard {h}: cameras={shard['streams']} "
+              f"frames={shard['frames']} dropped={shard['dropped']} "
+              f"tracker_launches={shard['tracker_launches']}")
+    if q is not None:
+        print(f"tracked mAP mean={q['map_mean']*100:.1f}% "
+              f"min={q['map_min']*100:.1f}%")
 
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="qwen3-4b", choices=ARCH_IDS)
+    ap.add_argument("--payload", default="tokens",
+                    choices=["tokens", "frames"],
+                    help="tokens: LLM serving; frames: sharded NVR "
+                         "detection on the serving mesh")
+    ap.add_argument("--shards", type=int, default=1,
+                    help="frames payload: mesh shards for the camera set")
+    ap.add_argument("--cameras", type=int, default=4)
+    ap.add_argument("--frames", type=int, default=24,
+                    help="frames payload: frames per camera")
+    ap.add_argument("--spmd", action="store_true",
+                    help="frames payload: use the mesh SPMD detect path "
+                         "(mini-SSD) instead of the proxy oracle")
+    ap.add_argument("--arch", default="qwen3-4b")
     ap.add_argument("--preset", default="smoke")
     ap.add_argument("--n-replicas", type=int, default=4)
     ap.add_argument("--scheduler", default="fcfs",
                     choices=["fcfs", "rr", "wrr", "proportional"])
     ap.add_argument("--requests", type=int, default=16)
-    ap.add_argument("--rate", type=float, default=20.0,
-                    help="request arrival rate (req/s)")
+    ap.add_argument("--rate", type=float, default=None,
+                    help="arrival rate: req/s for tokens (default 20), "
+                         "per-camera FPS for frames (default 2)")
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--new-tokens", type=int, default=8)
     ap.add_argument("--heterogeneous", action="store_true",
@@ -32,10 +100,21 @@ def main():
                          "NCS2 mix)")
     args = ap.parse_args()
 
+    if args.rate is None:
+        args.rate = 2.0 if args.payload == "frames" else 20.0
+
+    if args.payload == "frames":
+        serve_frames(args)
+        return
+
+    from repro.configs import ARCH_IDS, get_config
+    from repro.serving import Request, ServingEngine
+
+    if args.arch not in ARCH_IDS:
+        raise SystemExit(f"unknown --arch {args.arch}; one of {ARCH_IDS}")
     cfg = get_config(args.arch, preset=args.preset)
     if cfg.encoder_only:
-        raise SystemExit(f"{args.arch} is encoder-only: no decode serving "
-                         f"(see DESIGN.md §Arch-applicability)")
+        raise SystemExit(f"{args.arch} is encoder-only: no decode serving")
     speeds = None
     if args.heterogeneous:
         speeds = [0.2] + [1.0] * (args.n_replicas - 1)

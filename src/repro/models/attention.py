@@ -287,7 +287,7 @@ def apply_mla(p, cfg: ModelConfig, spec: LayerSpec, x, positions,
         # the compressed kv_lora space — W_kb is absorbed into the query
         # and W_vb into the output, so the (L, H, nope+v) expansion of the
         # cache never materializes.  Exact algebra; ~1000x fewer decode
-        # FLOPs at L=32k (EXPERIMENTS.md §Perf hillclimb #5).
+        # FLOPs at L=32k.
         L = cache["ckv"].shape[1]
         slot = jnp.mod(decode_pos, L)
         cckv = jax.lax.dynamic_update_slice(cache["ckv"], ckv, (0, slot, 0))

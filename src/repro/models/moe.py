@@ -17,7 +17,7 @@ Two dispatch scopes (MoEConfig.dispatch):
               entirely; experts compute via the same batched einsum.
               Capacity drops are decided per row instead of globally
               (standard practice; quality-neutral at equal capacity
-              factor).  See EXPERIMENTS.md §Perf hillclimb #2.
+              factor).
 
 Experts shard over the ``model`` mesh axis ("expert" logical axis) when
 the expert count divides it, else tensor-parallel inside each expert

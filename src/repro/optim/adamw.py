@@ -2,7 +2,7 @@
 
 Moment dtype is configurable: the 671B-class MoE configs use bfloat16
 moments so optimizer state fits the 16 GB/chip v5e HBM budget under full
-FSDP sharding (see DESIGN.md §7 / EXPERIMENTS.md §Dry-run)."""
+FSDP sharding (see docs/ARCHITECTURE.md §Sharding model)."""
 from __future__ import annotations
 
 from dataclasses import dataclass

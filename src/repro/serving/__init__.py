@@ -9,11 +9,23 @@ interleaves all streams into shared micro-batches and — under
 lockstep, one launch per tick), returning per-stream order, coverage,
 FPS and drop accounting alongside the unchanged global report keys.
 See ``repro.serving.engine`` for the full contract.
+
+Sharded serving (``repro.serving.sharded``): ``ShardedDetectionEngine``
+carries the same contract across a device mesh — the camera set is
+partitioned over shards (each shard a full ``DetectionEngine`` with its
+own lockstep tracker), the batched detect+NMS launch optionally runs as
+ONE ``jax.jit`` program spanning the mesh's replica axis
+(``make_spmd_detect``), and per-shard reports merge into one global
+report (``merge_shard_reports``) that ``core.quality.evaluate_streams``
+consumes unchanged.
 """
 from .engine import (DetectionEngine, DetectionResponse, FrameRequest,
                      ReplicaExecutor, Request, Response, ServingEngine)
 from .nvr import make_nvr_streams
+from .sharded import (ShardedDetectionEngine, make_spmd_detect,
+                      merge_shard_reports)
 
 __all__ = ["DetectionEngine", "DetectionResponse", "FrameRequest",
            "Request", "Response", "ReplicaExecutor", "ServingEngine",
-           "make_nvr_streams"]
+           "ShardedDetectionEngine", "make_nvr_streams",
+           "make_spmd_detect", "merge_shard_reports"]

@@ -48,6 +48,11 @@ from ..runtime.steps import make_decode_step, make_prefill_step
 
 @dataclass
 class Request:
+    """Token-payload request for ``ServingEngine``: a prompt of
+    ``tokens`` (``(prompt_len,)`` int32) arriving at virtual time
+    ``t_arrival``, asking for ``max_new_tokens`` of greedy decode.
+    ``rid`` is the caller-assigned unique request id that responses
+    are matched and ordered by."""
     rid: int
     tokens: np.ndarray            # (prompt_len,)
     max_new_tokens: int = 8
@@ -56,6 +61,14 @@ class Request:
 
 @dataclass
 class FrameRequest:
+    """Video-frame request for ``DetectionEngine``: one camera frame
+    (``image``: ``(S, S, 3)`` float32) arriving at virtual time
+    ``t_arrival``.
+
+    ``stream_id`` names the camera the frame belongs to (default 0,
+    the single-stream case); ``rid`` must stay globally unique ACROSS
+    cameras — the engine derives the frame's position within its own
+    camera's stream and returns it as ``DetectionResponse.seq``."""
     rid: int
     image: np.ndarray             # (S, S, 3) float32
     t_arrival: float = 0.0
@@ -64,6 +77,18 @@ class FrameRequest:
 
 @dataclass
 class DetectionResponse:
+    """Per-frame detection result from ``DetectionEngine.serve``.
+
+    ``boxes``/``scores``/``classes`` are fixed-width ``max_out`` rows
+    with ``valid`` masking the real detections.  ``replica`` is the
+    executor that processed the frame, or ``-1`` for a frame the
+    scheduler dropped and the tracker re-emitted (``interpolated=True``
+    — boxes are the tracker's coasted prediction, ``track_ids`` carries
+    the persistent track identities).  ``t_start``/``t_done`` are
+    virtual-clock processing bounds and ``service_s`` the per-frame
+    service share of the micro-batch.  ``stream_id``/``seq`` locate the
+    frame in its camera's stream: ``seq`` is the per-stream arrival
+    index the per-camera reorder/quality accounting keys on."""
     rid: int
     boxes: np.ndarray             # (max_out, 4)
     scores: np.ndarray            # (max_out,)
@@ -81,6 +106,10 @@ class DetectionResponse:
 
 @dataclass
 class Response:
+    """Token-payload response from ``ServingEngine.serve``: the greedy
+    decode ``tokens`` for request ``rid``, the ``replica`` that served
+    it, its virtual-clock ``t_start``/``t_done`` window and the
+    measured wall ``service_s``."""
     rid: int
     tokens: np.ndarray            # generated ids
     replica: int
@@ -116,6 +145,19 @@ class ReplicaExecutor:
 
 
 class ServingEngine:
+    """Token-payload serving: the paper's parallel-replica scheduling
+    applied to an LLM decode loop.
+
+    ``n_replicas`` logical replicas share one set of jitted
+    prefill/decode programs; each request's REAL measured wall time,
+    scaled by the replica's ``replica_speeds`` multiplier
+    (heterogeneous pools), drives the same virtual-clock schedulers as
+    the edge simulator (``scheduler`` in fcfs/rr/wrr/proportional).
+    ``drop_when_busy=True`` reproduces the paper's load shedding: a
+    request arriving with every replica busy is dropped instead of
+    queued.  ``serve`` returns responses in arrival order plus
+    throughput/latency/per-replica accounting."""
+
     def __init__(self, cfg: ModelConfig, params=None, n_replicas: int = 4,
                  scheduler: str = "fcfs", cache_len: int = 128,
                  replica_speeds: Optional[Sequence[float]] = None,
@@ -307,7 +349,11 @@ class DetectionEngine:
     @staticmethod
     def _bucket(k: int) -> int:
         """Pad adaptive batches to power-of-two buckets: O(log mb) jit
-        traces instead of one per distinct queue depth."""
+        traces instead of one per distinct queue depth.
+
+        >>> [DetectionEngine._bucket(k) for k in (1, 2, 3, 5, 8)]
+        [1, 2, 4, 8, 8]
+        """
         b = 1
         while b < k:
             b <<= 1
@@ -326,7 +372,19 @@ class DetectionEngine:
         Frames from several cameras (distinct ``stream_id``) interleave
         into the SAME micro-batches and replicas; the report carries
         per-stream coverage/FPS/drop accounting next to the global keys
-        (see the module docstring for the multi-camera contract)."""
+        (see the module docstring for the multi-camera contract).
+
+        Report keys: ``responses`` (rid order), ``dropped`` (rids, in
+        arrival order), ``coverage`` = responses/frames,
+        ``interpolated`` (count of tracker-filled frames),
+        ``throughput_fps``, ``per_replica`` (frames per executor),
+        ``n_streams``, ``streams`` ({stream_id: responses in
+        per-stream ``seq`` order}), ``emit_t`` ({stream_id: monotonic
+        release clocks, same length as the stream's responses}),
+        ``per_stream`` ({stream_id: frames / dropped / interpolated /
+        coverage / throughput_fps}), and ``tracker_launches`` /
+        ``tracker_ticks`` (lockstep-tracker accounting; 0 unless
+        ``track_and_interpolate``)."""
         if not self._warm:
             self.warmup()
         frames = sorted(frames, key=lambda f: f.t_arrival)

@@ -1,0 +1,305 @@
+"""Sharded multi-host NVR serving on the replica mesh.
+
+``DetectionEngine`` multiplexes every camera of an NVR deployment onto
+one host's replica pool.  This layer carries the same serving contract
+across a *device mesh*: the camera set is partitioned over mesh shards
+(``sharding.serving_rules.shard_streams`` — deterministic, so every
+host agrees without communicating), each shard runs its own
+``DetectionEngine`` — its own scheduler, interleaved micro-batches and
+lockstep ``B = cameras-per-shard`` tracker — and the per-shard reports
+are merged into ONE global engine report with the exact key set
+``DetectionEngine.serve`` produces (so ``core.quality.evaluate_streams``
+consumes it unchanged).
+
+Two detection paths
+-------------------
+* **SPMD fast path** (``mesh=`` given): the batched detect+NMS launch
+  is ONE ``jax.jit`` program whose micro-batch dim carries the
+  ``replica`` logical axis (``constrain_frames`` /
+  ``constrain_detections``), compiled once and shared by every shard —
+  the mesh, not a Python loop, spreads frames over devices.  This is
+  the paper's "n parallel detection models" as a single compiled
+  program spanning the mesh.
+* **Scheduler fallback** (``mesh=None``): each shard's engine keeps its
+  own per-host jitted program (or the caller's ``detect_fn`` oracle) —
+  the path for heterogeneous device pools, which one SPMD program
+  cannot model, and for numpy oracles, which cannot be jitted.
+
+Single-shard regression bar: ``ShardedDetectionEngine(n_shards=1,
+**kw).serve(trace)`` is bit-identical to
+``DetectionEngine(**kw).serve(trace)`` — the sharded layer adds keys
+(``n_shards``, ``per_shard``, ``shard_of_stream``) but never changes
+the base report.
+"""
+from __future__ import annotations
+
+from dataclasses import replace
+from typing import Dict, List, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.synchronizer import SequenceSynchronizer
+from ..sharding.context import mesh_context
+from ..sharding.serving_rules import (constrain_detections, constrain_frames,
+                                      shard_streams)
+from .engine import DetectionEngine, FrameRequest
+
+
+def make_spmd_detect(cfg, params, mesh, *, score_thr: float = 0.4,
+                     iou_thr: float = 0.5, max_out: int = 32,
+                     use_pallas: bool = False):
+    """ONE jitted detect+NMS program spanning every replica of ``mesh``.
+
+    Wraps the unchanged ``detector.decode_detections`` with replica-axis
+    sharding constraints on its input images and output detections, so
+    a micro-batch of B frames is computed by the mesh's ``data`` axis
+    shards in a single compiled program — the SPMD replacement for the
+    Python-side per-replica executor loop.  On a 1-device mesh the
+    constraints are no-ops and the outputs are bit-identical to
+    ``DetectionEngine``'s own jitted path.
+
+    Returns a ``(images, rids=None) -> (boxes, scores, classes, valid)``
+    callable matching the ``DetectionEngine.detect_fn`` interface
+    (blocking, so the engine's wall-time measurement brackets real
+    device work)."""
+    from ..detector import decode_detections, make_anchors
+    anchors = jnp.asarray(make_anchors(cfg))
+
+    def infer(imgs):
+        imgs = constrain_frames(imgs)
+        out = decode_detections(params, cfg, imgs, anchors,
+                                score_thr=score_thr, iou_thr=iou_thr,
+                                max_out=max_out, use_pallas=use_pallas)
+        return constrain_detections(*out)
+
+    jitted = jax.jit(infer)
+
+    def detect(images, rids=None):
+        with mesh_context(mesh):
+            return jax.block_until_ready(jitted(jnp.asarray(images)))
+
+    return detect
+
+
+def merge_shard_reports(frames: Sequence[FrameRequest],
+                        reports: Sequence[Dict],
+                        pool_sizes: Sequence[int]) -> Dict:
+    """Merge per-shard ``DetectionEngine.serve`` reports into one global
+    engine report.
+
+    Streams are disjoint across shards, so the per-stream maps
+    (``streams`` / ``emit_t`` / ``per_stream``) merge by union; global
+    scalars (``coverage``, ``throughput_fps``) are recomputed from the
+    merged responses with the same formulas ``DetectionEngine`` uses;
+    replica ids are renumbered globally (shard ``h``'s replica ``i``
+    becomes ``offset(h) + i`` with ``offset = cumsum(pool_sizes)``) —
+    both the ``per_replica`` map and every ``DetectionResponse.replica``
+    field (the ``-1`` tracker-interpolated sentinel excepted), so
+    grouping responses by replica stays consistent with the map.  With
+    a single shard every merged key is bit-identical to the shard's own
+    report.
+
+    Adds the shard-level view on top: ``n_shards`` and ``per_shard``
+    (per-shard frame/response/drop/tracker counts).  The caller attaches
+    ``shard_of_stream``."""
+    # renumber replica ids on COPIES (never mutate the caller's shard
+    # reports), keeping the -1 tracker-interpolated sentinel; offset 0
+    # (first shard / single shard) reuses the original objects so the
+    # shards=1 report stays bit-identical
+    responses = []
+    per_replica: Dict[int, int] = {}
+    offset = 0
+    for rep, n_pool in zip(reports, pool_sizes):
+        for idx, count in rep["per_replica"].items():
+            per_replica[offset + idx] = count
+        for r in rep["responses"]:
+            if offset and r.replica >= 0:
+                r = replace(r, replica=r.replica + offset)
+            responses.append(r)
+        offset += n_pool
+    responses.sort(key=lambda r: r.rid)
+    # global arrival order (stable on ties, like the engine's own sort)
+    pos = {f.rid: i for i, f in
+           enumerate(sorted(frames, key=lambda f: f.t_arrival))}
+    dropped = sorted((rid for rep in reports for rid in rep["dropped"]),
+                     key=pos.__getitem__)
+    makespan = max((r.t_done for r in responses), default=0.0)
+    # rebuild the per-stream view from the (possibly copied) merged
+    # responses with the engine's own reorder helper, so ``streams``
+    # holds the SAME objects as ``responses`` — the DetectionEngine
+    # contract; per-stream stats merge by union (streams are disjoint)
+    ordered = SequenceSynchronizer.order_per_stream(responses)
+    streams = {sid: rs for sid, (rs, _) in ordered.items()}
+    emit_t = {sid: em for sid, (_, em) in ordered.items()}
+    per_stream: Dict[int, Dict] = {}
+    for rep in reports:
+        per_stream.update(rep["per_stream"])
+        for sid in rep["streams"]:
+            streams.setdefault(sid, [])      # streams with 0 responses
+            emit_t.setdefault(sid, [])
+    return {
+        "responses": responses,
+        "dropped": dropped,
+        "coverage": len(responses) / max(len(frames), 1),
+        "interpolated": sum(rep["interpolated"] for rep in reports),
+        "throughput_fps": len(responses) / max(makespan, 1e-9),
+        "per_replica": per_replica,
+        "n_streams": sum(rep["n_streams"] for rep in reports),
+        "streams": streams,
+        "emit_t": emit_t,
+        "per_stream": per_stream,
+        "tracker_launches": sum(rep["tracker_launches"]
+                                for rep in reports),
+        "tracker_ticks": max((rep["tracker_ticks"] for rep in reports),
+                             default=0),
+        "n_shards": len(reports),
+        "per_shard": [{
+            "streams": sorted(rep["per_stream"]),
+            "frames": sum(v["frames"] for v in rep["per_stream"].values()),
+            "responses": len(rep["responses"]),
+            "dropped": len(rep["dropped"]),
+            "interpolated": rep["interpolated"],
+            "tracker_launches": rep["tracker_launches"],
+            "tracker_ticks": rep["tracker_ticks"],
+        } for rep in reports],
+    }
+
+
+class ShardedDetectionEngine:
+    """NVR detection serving partitioned over mesh shards.
+
+    ``n_shards`` Python-level shards each own a full ``DetectionEngine``
+    (replica pool, scheduler, micro-batching, lockstep tracker with
+    ``B = cameras assigned to the shard``); the camera set is split by
+    the deterministic ``shard_streams`` partition and the per-shard
+    reports merge into one global report (``merge_shard_reports``).
+    Every ``DetectionEngine`` keyword is accepted and forwarded
+    verbatim to the shard engines, so ``n_shards=1`` is a transparent
+    wrapper: same trace in, bit-identical report out (plus the
+    ``n_shards`` / ``per_shard`` / ``shard_of_stream`` extras).
+
+    ``mesh`` switches the detection compute to the SPMD fast path: one
+    ``make_spmd_detect`` program shared by all shards, its micro-batch
+    dim constrained to the mesh's replica (``data``) axis.  Requires
+    the built-in mini-SSD path (a numpy ``detect_fn`` oracle cannot be
+    jitted — passing both is an error); heterogeneous
+    ``replica_speeds`` keep working because speeds scale the *virtual*
+    service clock, not the compiled program.  Off-mesh (``mesh=None``)
+    the engines keep today's per-host scheduler path.
+
+    Example::
+
+        mesh = make_serving_mesh(4)            # 4-shard host mesh
+        eng = ShardedDetectionEngine(n_shards=4, mesh=mesh,
+                                     n_replicas=2,
+                                     track_and_interpolate=True)
+        report = eng.serve(frames)             # same keys as the
+                                               # single-host engine
+    """
+
+    def __init__(self, n_shards: int = 1, mesh=None, cfg=None, params=None,
+                 seed: int = 0, detect_fn=None, use_pallas: bool = False,
+                 score_thr: float = 0.4, iou_thr: float = 0.5,
+                 max_out: int = 32, **engine_kwargs):
+        if n_shards < 1:
+            raise ValueError(f"n_shards must be >= 1, got {n_shards}")
+        if mesh is not None and detect_fn is not None:
+            raise ValueError(
+                "mesh= (SPMD detect) and detect_fn= (host-side oracle) "
+                "are mutually exclusive: an arbitrary Python callable "
+                "cannot be compiled across mesh shards — drop mesh= to "
+                "use the scheduler fallback path")
+        self.n_shards = n_shards
+        self.mesh = mesh
+        self._shared_detect = None
+        self._spmd_warm = False
+        if mesh is not None:
+            from ..detector import SSDConfig, init_ssd
+            cfg = cfg or SSDConfig()
+            if params is None:
+                params = init_ssd(cfg, jax.random.PRNGKey(seed))
+            self._shared_detect = make_spmd_detect(
+                cfg, params, mesh, score_thr=score_thr, iou_thr=iou_thr,
+                max_out=max_out, use_pallas=use_pallas)
+            self.cfg = cfg
+            shard_detect_kw = dict(detect_fn=self._shared_detect, cfg=cfg)
+        else:
+            if detect_fn is None:
+                # meshless mini-SSD: init the params ONCE — the shards
+                # are replicas of the same model, not n different ones
+                from ..detector import SSDConfig, init_ssd
+                cfg = cfg or SSDConfig()
+                if params is None:
+                    params = init_ssd(cfg, jax.random.PRNGKey(seed))
+            shard_detect_kw = dict(detect_fn=detect_fn, cfg=cfg,
+                                   params=params, seed=seed,
+                                   use_pallas=use_pallas,
+                                   score_thr=score_thr, iou_thr=iou_thr,
+                                   max_out=max_out)
+            self.cfg = cfg
+        self.engines = [DetectionEngine(**shard_detect_kw, **engine_kwargs)
+                        for _ in range(n_shards)]
+        if mesh is None and detect_fn is None:
+            # one jitted program for all shards (identical closures
+            # would otherwise re-trace/compile per shard)
+            for eng in self.engines[1:]:
+                eng._infer = self.engines[0]._infer
+
+    # ------------------------------------------------------------- warmup
+    def warmup(self):
+        """Warm every shard engine, plus — on the SPMD path — compile the
+        shared mesh program at every power-of-two micro-batch bucket
+        the engines can emit, so no served batch's measured wall time
+        (which drives the schedulers' service estimates) includes XLA
+        compilation."""
+        for eng in self.engines:
+            if not eng._warm:
+                eng.warmup()
+        if self._shared_detect is not None and not self._spmd_warm:
+            size = self.cfg.image_size
+            eng = self.engines[0]
+            if eng.micro_batch is not None:
+                # fixed mode pads every batch to exactly micro_batch
+                shapes = [eng.micro_batch]
+            else:
+                # adaptive mode buckets to powers of two, up to the
+                # bucket that COVERS max_micro_batch (e.g. max 6 -> 8)
+                shapes, b = [], 1
+                while b < DetectionEngine._bucket(eng.max_micro_batch):
+                    shapes.append(b)
+                    b <<= 1
+                shapes.append(b)
+            for b in shapes:
+                self._shared_detect(
+                    np.zeros((b, size, size, 3), np.float32))
+            self._spmd_warm = True
+
+    # ------------------------------------------------------------- serving
+    def serve(self, frames: Sequence[FrameRequest]) -> Dict:
+        """Partition the trace's cameras over the shards, serve each
+        shard's sub-trace through its own engine, and merge the
+        per-shard reports into one global report (same keys as
+        ``DetectionEngine.serve`` plus ``n_shards`` / ``per_shard`` /
+        ``shard_of_stream``).
+
+        ``rid`` stays globally unique and ``seq`` is per-stream, so
+        responses and quality accounting are unaffected by WHICH shard
+        served a camera; only drop/latency behaviour depends on the
+        per-shard pools."""
+        if self._shared_detect is not None:
+            self.warmup()
+        shard_of = shard_streams((f.stream_id for f in frames),
+                                 self.n_shards)
+        per_shard_frames: List[List[FrameRequest]] = [
+            [] for _ in range(self.n_shards)]
+        for f in frames:                      # preserves caller order
+            per_shard_frames[shard_of[f.stream_id]].append(f)
+        reports = [eng.serve(sub) for eng, sub in
+                   zip(self.engines, per_shard_frames)]
+        out = merge_shard_reports(frames, reports,
+                                  [len(eng.replicas)
+                                   for eng in self.engines])
+        out["shard_of_stream"] = shard_of
+        return out

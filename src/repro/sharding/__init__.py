@@ -1,9 +1,16 @@
+"""Mesh-free sharding hooks: logical axis names (``context``),
+path-based parameter/input rules for the model surface (``rules``),
+and frame/detection specs + the NVR camera partition for the serving
+surface (``serving_rules``)."""
 from .context import (active_mesh, constrain, mesh_context, logical_to_mesh,
                       resolve_spec)
 from .rules import param_specs, param_shardings, batch_spec, input_shardings
+from .serving_rules import (constrain_detections, constrain_frames,
+                            shard_streams, streams_of_shard)
 
 __all__ = [
     "active_mesh", "constrain", "mesh_context", "logical_to_mesh",
     "resolve_spec", "param_specs", "param_shardings", "batch_spec",
-    "input_shardings",
+    "input_shardings", "constrain_detections", "constrain_frames",
+    "shard_streams", "streams_of_shard",
 ]

@@ -1,0 +1,98 @@
+"""Sharding rules for the detection-serving surface.
+
+The model-side tables in ``rules.py`` map *parameter paths* to logical
+specs; serving needs the complement: logical specs for the frame /
+detection tensors that flow through the batched detect+NMS program, and
+a deterministic partition of the NVR camera set over mesh shards.
+
+Logical layout
+--------------
+Every serving tensor is batch-major with the micro-batch (frame) dim
+first, and that dim carries the ``replica`` logical axis — the paper's
+"n parallel detection models", resolved to the mesh's ``data`` axis by
+``context.LOGICAL_AXES`` (with the usual divisibility fallback: a
+micro-batch that does not divide the axis stays replicated rather than
+failing).  All trailing dims (pixels, anchor slots, box coords) stay
+unsharded: detection is embarrassingly parallel across frames.
+
+* images  ``(B, S, S, 3)``  -> ``("replica", None, None, None)``
+* boxes   ``(B, D, 4)``     -> ``("replica", None, None)``
+* scores / classes / valid ``(B, D)`` -> ``("replica", None)``
+
+``constrain_frames`` / ``constrain_detections`` apply those specs via
+``context.constrain`` — identity outside a ``mesh_context``, a
+``with_sharding_constraint`` inside one — so
+``serving.sharded.make_spmd_detect`` can wrap the unchanged
+``detector.decode_detections`` in ONE jitted program that spans every
+replica of the mesh.
+
+Camera partition
+----------------
+``shard_streams`` is the Python-side complement: the static assignment
+of camera ids to mesh shards that ``ShardedDetectionEngine`` uses to
+split the NVR request trace.  It is deterministic (sorted round-robin)
+so two hosts computing the partition independently agree on it.
+"""
+from __future__ import annotations
+
+from typing import Dict, Iterable, List
+
+from .context import constrain
+
+# logical per-dim axes of the serving tensors (batch dim = paper replicas)
+FRAME_AXES = ("replica", None, None, None)      # (B, S, S, 3) images
+BOX_AXES = ("replica", None, None)              # (B, D, 4) boxes
+ROW_AXES = ("replica", None)                    # (B, D) scores/classes/valid
+
+
+def constrain_frames(images):
+    """Pin a micro-batch of images ``(B, S, S, 3)`` to the replica axis.
+
+    Identity outside a mesh context; inside one, the batch dim is split
+    into contiguous blocks of ``B / n_shards`` frames, one block per
+    mesh shard (jax's NamedSharding block layout — NOT round-robin),
+    when ``B`` divides the axis; otherwise the divisibility fallback
+    keeps the batch replicated."""
+    return constrain(images, *FRAME_AXES)
+
+
+def constrain_detections(boxes, scores, classes, valid):
+    """Pin a batched detection tuple ``(boxes (B,D,4), scores (B,D),
+    classes (B,D), valid (B,D))`` to the replica axis, mirroring
+    ``constrain_frames`` on the output side of the fused detect+NMS
+    program."""
+    return (constrain(boxes, *BOX_AXES),
+            constrain(scores, *ROW_AXES),
+            constrain(classes, *ROW_AXES),
+            constrain(valid, *ROW_AXES))
+
+
+def shard_streams(stream_ids: Iterable[int],
+                  n_shards: int) -> Dict[int, int]:
+    """Deterministic partition of camera ids over ``n_shards`` shards.
+
+    Sorted round-robin: camera ranks are assigned modulo the shard
+    count, so shard loads differ by at most one camera and the mapping
+    depends only on the *set* of ids (any two hosts agree on it
+    without communicating).
+
+    >>> shard_streams([3, 0, 2, 1], 2)
+    {0: 0, 1: 1, 2: 0, 3: 1}
+    >>> shard_streams([7], 4)
+    {7: 0}
+    >>> shard_streams([], 2)
+    {}
+    """
+    if n_shards < 1:
+        raise ValueError(f"n_shards must be >= 1, got {n_shards}")
+    sids = sorted(set(int(s) for s in stream_ids))
+    return {sid: i % n_shards for i, sid in enumerate(sids)}
+
+
+def streams_of_shard(shard_of: Dict[int, int], shard: int) -> List[int]:
+    """The sorted camera ids assigned to ``shard`` by ``shard_streams``.
+
+    >>> streams_of_shard({0: 0, 1: 1, 2: 0, 3: 1}, 0)
+    [0, 2]
+    """
+    return sorted(s for s, h in shard_of.items() if h == shard)

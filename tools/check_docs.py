@@ -1,0 +1,101 @@
+"""Documentation checks, run by CI and `tests/test_docs.py`:
+
+1. **Intra-repo links** — every relative markdown link in `*.md`
+   (repo root and subdirectories, hidden/cache dirs skipped) must
+   resolve to an existing file or directory. External (`http://`,
+   `https://`, `mailto:`) and pure-anchor (`#...`) links are ignored;
+   anchor fragments on file links are stripped before the existence
+   check.
+2. **Doctests** — `doctest.testmod` over the modules whose docstrings
+   carry `>>>` examples (`DOCTEST_MODULES`); a failing example fails
+   the check, and a listed module with zero collected examples fails
+   too (it means the examples were dropped without updating the list).
+
+  PYTHONPATH=src python tools/check_docs.py
+
+Exit code 0 = clean, 1 = problems (each printed on its own line).
+"""
+from __future__ import annotations
+
+import doctest
+import importlib
+import re
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parents[1]
+
+SKIP_DIRS = {"__pycache__", "node_modules", "venv", "build", "dist",
+             "site-packages"}
+# exemplar material quoted verbatim from OTHER repos — their relative
+# links point inside those repos, not this one
+SKIP_FILES = {"SNIPPETS.md"}
+
+# modules whose docstrings carry runnable >>> examples
+DOCTEST_MODULES = [
+    "repro.sharding.serving_rules",
+    "repro.serving.engine",
+]
+
+_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+
+
+def markdown_files(root: Path = REPO):
+    for path in sorted(root.rglob("*.md")):
+        parts = path.relative_to(root).parts
+        # skip hidden trees (.git, .venv, .claude, ...) and anything
+        # that looks like an install/build dir — local environments
+        # must not fail the repo's own doc check
+        if any(p.startswith(".") or p in SKIP_DIRS for p in parts[:-1]):
+            continue
+        if path.name in SKIP_FILES:
+            continue
+        yield path
+
+
+def broken_links(root: Path = REPO):
+    """All broken relative links as (md_file, link_target) pairs."""
+    broken = []
+    for md in markdown_files(root):
+        for target in _LINK.findall(md.read_text()):
+            if target.startswith(("http://", "https://", "mailto:", "#")):
+                continue
+            rel = target.split("#", 1)[0]
+            if not rel:
+                continue
+            if not (md.parent / rel).exists():
+                broken.append((str(md.relative_to(root)), target))
+    return broken
+
+
+def run_doctests(modules=DOCTEST_MODULES):
+    """(failures, attempted) over all listed modules; a module with no
+    collected examples counts as one failure."""
+    failed = attempted = 0
+    for name in modules:
+        mod = importlib.import_module(name)
+        res = doctest.testmod(mod, verbose=False)
+        if res.attempted == 0:
+            print(f"doctest: {name} has no examples but is listed in "
+                  "DOCTEST_MODULES")
+            failed += 1
+        failed += res.failed
+        attempted += res.attempted
+    return failed, attempted
+
+
+def main() -> int:
+    problems = 0
+    for md, target in broken_links():
+        print(f"broken link: {md} -> {target}")
+        problems += 1
+    failed, attempted = run_doctests()
+    problems += failed
+    print(f"checked {sum(1 for _ in markdown_files())} markdown files, "
+          f"ran {attempted} doctest examples, "
+          f"{problems} problem(s)")
+    return 1 if problems else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
