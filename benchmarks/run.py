@@ -114,7 +114,8 @@ def main():
         # count only applies before the first jax init, so in this
         # process the SPMD micro-bench clamps to the visible devices;
         # run sharded_bench.py standalone for the real multi-device mesh.
-        from benchmarks.sharded_bench import bench_shard_row
+        from benchmarks.sharded_bench import (bench_shard_row,
+                                              bench_stealing_row)
         r = bench_shard_row(2, 4, 16, rate=2.0, iters=3, reps=1)
         print(f"sharded_2shard_serve,{r['serve_ms']*1e3:.0f},"
               f"{r['map_mean']:.4f}")
@@ -122,6 +123,18 @@ def main():
               f"step_ms={r['tracker_step_ms']:.2f} "
               f"spmd_ms={r['spmd_detect_ms']:.2f} "
               f"interp={r['interpolated']}")
+        # cross-shard work stealing on the skewed (2x shard-0) trace:
+        # derived = drops recovered by stealing vs the static partition
+        w = bench_stealing_row(2, 12, rate=1.0, iters=3, reps=1)
+        print(f"sharded_2shard_stealing,{w['serve_ms_stealing']*1e3:.0f},"
+              f"{w['drops_static'] - w['drops_stealing']}")
+        print(f"# stealing n=2: drops {w['drops_static']}->"
+              f"{w['drops_stealing']} cov_min "
+              f"{w['coverage_min_static']:.3f}->"
+              f"{w['coverage_min_stealing']:.3f} "
+              f"migrations={len(w['migrations'])} "
+              f"step_ms {w['tracker_step_ms_static']:.2f}->"
+              f"{w['tracker_step_ms_stealing']:.2f}")
 
     if "roofline" in names:
         try:

@@ -25,6 +25,18 @@ Acceptance (all measured here, not trusted): every row full coverage,
 single-shard report bit-identical to ``DetectionEngine``, SPMD detect
 bit-compatible with the plain jitted path, and the per-shard tracker
 step at the largest shard count beating the unsharded one.
+
+Work-stealing section (``work_stealing`` key): a SKEWED trace — the
+cameras the static partition puts on shard 0 run at 2x rate — served
+static vs ``rebalance=True`` at each shard count, in drop mode so the
+rate mismatch is visible as drops.  Per row: total drops, min
+per-stream coverage, executed migrations, serve wall time, and the
+lockstep tracker step at the max cameras-per-shard each policy ends up
+with.  Gated: stealing must STRICTLY reduce total drops at every
+multi-shard row while no stream's coverage falls below its static
+value, the single-shard row must be unchanged by the flag, and
+``rebalance=False`` must stay bit-identical to the per-shard
+DetectionEngine + ``merge_shard_reports`` composition.
 """
 from __future__ import annotations
 
@@ -160,6 +172,92 @@ def bench_shard_row(n_shards, n_streams, n_frames, rate, iters, reps):
     }
 
 
+def bench_stealing_row(n_shards, n_frames, rate, iters, reps):
+    """Static partition vs cross-shard work stealing on the skewed
+    trace, drop mode (the rate mismatch shows up as drops, the paper's
+    §III pathology).  Coverage below is per-stream served fraction."""
+    from benchmarks.tracking_bench import bench_step
+    from repro.core import proxy_detect_fn_streams
+    from repro.serving import make_skewed_streams, ShardedDetectionEngine
+
+    n_streams = 3 * n_shards
+    frames, frame_of, videos, dets = make_skewed_streams(
+        n_streams, n_frames, rate, n_shards)
+    oracle = proxy_detect_fn_streams(videos, dets, frame_of)
+    kw = dict(n_shards=n_shards, detect_fn=oracle, n_replicas=2,
+              service_time=0.36, drop_when_busy=True)
+    outs, serve_ms = {}, {}
+    for name, extra in (("static", {}),
+                        ("stealing", {"rebalance": True,
+                                      "epoch_s": 4.0 * n_frames / 12})):
+        eng = ShardedDetectionEngine(**kw, **extra)
+        t0 = time.perf_counter()
+        outs[name] = eng.serve(frames)
+        serve_ms[name] = round((time.perf_counter() - t0) * 1e3, 1)
+    static, steal = outs["static"], outs["stealing"]
+    cov = {name: {sid: v["coverage"]
+                  for sid, v in outs[name]["per_stream"].items()}
+           for name in outs}
+    # lockstep tracker step at the max cameras-per-shard each policy
+    # ends up with (stealing can RAISE the receiver's B — honest cost)
+    cams = {"static": max(len(s["streams"]) for s in static["per_shard"]),
+            "stealing": max(len(s["streams"])
+                            for s in steal["per_shard"])}
+    step = {name: bench_step(b, 24, iters, reps)["step_ms"]
+            for name, b in cams.items()}
+    return {
+        "n_shards": n_shards,
+        "cameras": n_streams,
+        "frames": len(frames),
+        "drops_static": len(static["dropped"]),
+        "drops_stealing": len(steal["dropped"]),
+        "coverage_min_static": round(min(cov["static"].values()), 4),
+        "coverage_min_stealing": round(min(cov["stealing"].values()), 4),
+        "coverage_ge_static_all_streams": all(
+            cov["stealing"][sid] >= c for sid, c in cov["static"].items()),
+        "migrations": steal.get("migrations", []),
+        "n_epochs": steal.get("n_epochs", 1),
+        "cams_per_shard_static": cams["static"],
+        "cams_per_shard_stealing": cams["stealing"],
+        "tracker_step_ms_static": step["static"],
+        "tracker_step_ms_stealing": step["stealing"],
+        "serve_ms_static": serve_ms["static"],
+        "serve_ms_stealing": serve_ms["stealing"],
+    }
+
+
+def rebalance_off_bit_identical(n_frames, rate):
+    """``rebalance=False`` vs the hand-rolled pre-stealing composition
+    (per-shard DetectionEngine under the static partition +
+    merge_shard_reports): every shared key must match bit-for-bit."""
+    from repro.core import proxy_detect_fn_streams
+    from repro.serving import (DetectionEngine, ShardedDetectionEngine,
+                               make_skewed_streams, merge_shard_reports)
+    from repro.sharding import shard_streams
+
+    frames, frame_of, videos, dets = make_skewed_streams(
+        6, n_frames, rate, 2)
+    oracle = proxy_detect_fn_streams(videos, dets, frame_of)
+    kw = dict(detect_fn=oracle, n_replicas=2, service_time=0.36,
+              drop_when_busy=True)
+    sh = ShardedDetectionEngine(n_shards=2, rebalance=False,
+                                **kw).serve(frames)
+    part = shard_streams(range(6), 2)
+    subs = [[f for f in frames if part[f.stream_id] == h]
+            for h in range(2)]
+    reports = [DetectionEngine(**kw).serve(s) for s in subs]
+    manual = merge_shard_reports(frames, reports, [2, 2])
+    same = all(
+        ra.rid == rb.rid and ra.replica == rb.replica
+        and ra.t_done == rb.t_done
+        and np.array_equal(ra.boxes, rb.boxes)
+        for ra, rb in zip(manual["responses"], sh["responses"]))
+    scalars = all(manual[k] == sh[k] for k in
+                  ("coverage", "dropped", "per_replica", "per_stream",
+                   "throughput_fps", "tracker_launches"))
+    return same and scalars and "migrations" not in sh
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
@@ -186,6 +284,12 @@ def main():
                             iters=iters, reps=reps)
             for n in shard_counts]
 
+    skew_frames = max(n_frames // 2, 12)
+    steal_rows = [bench_stealing_row(n, skew_frames, rate=1.0,
+                                     iters=iters, reps=reps)
+                  for n in shard_counts]
+    rebalance_off_ok = rebalance_off_bit_identical(skew_frames, rate=1.0)
+
     frames, frame_of, videos, dets = make_nvr_streams(n_streams,
                                                       n_frames, rate=2.0)
     oracle = proxy_detect_fn_streams(videos, dets, frame_of)
@@ -202,7 +306,34 @@ def main():
                  "stream_rate_fps": 2.0, "n_replicas_per_shard": 2,
                  "service_time_s": 0.4},
         "rows": rows,
+        # NOTE: the skewed runs use their own operating point (slower
+        # streams, tighter service time) so the static partition really
+        # drops — the top-level ``pool`` config does NOT apply here
+        "work_stealing": {
+            "skew": 2.0,
+            "frames_per_slow_stream": skew_frames,
+            "epoch_s": 4.0 * skew_frames / 12,
+            "slow_stream_rate_fps": 1.0,
+            "service_time_s": 0.36,
+            "n_replicas_per_shard": 2,
+            "rows": steal_rows,
+        },
         "acceptance": {
+            # skewed trace: stealing strictly reduces total drops at
+            # every multi-shard row (where the static partition really
+            # drops), never costs any stream coverage, and is a no-op
+            # at one shard (no peer to steal from)
+            "stealing_strictly_reduces_drops": all(
+                r["drops_stealing"] < r["drops_static"]
+                and r["drops_static"] > 0
+                for r in steal_rows if r["n_shards"] >= 2),
+            "stealing_coverage_ge_static_all_streams": all(
+                r["coverage_ge_static_all_streams"] for r in steal_rows),
+            "single_shard_stealing_is_static": all(
+                r["drops_stealing"] == r["drops_static"]
+                and not r["migrations"]
+                for r in steal_rows if r["n_shards"] == 1),
+            "rebalance_off_bit_identical": rebalance_off_ok,
             "per_stream_coverage_all_one": all(
                 r["coverage"] == 1.0 for r in rows),
             "single_shard_bit_identical_to_detection_engine":

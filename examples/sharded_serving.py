@@ -70,6 +70,34 @@ def main():
           f"{len(out['per_replica'])} replicas across "
           f"{out['n_shards']} shards")
 
+    # cross-shard work stealing: skew the load (the cameras the static
+    # partition puts on shard 0 run at 2x rate) and compare the static
+    # partition against epoch-based rebalancing in drop mode — the rate
+    # mismatch the paper diagnoses, fixed at runtime by migrating one
+    # hot camera to an idle shard
+    from repro.serving import make_skewed_streams
+
+    print("== cross-shard work stealing (shard-0 cameras at 2x rate, "
+          "drop mode) ==")
+    print(f"  {'policy':>9s} {'drops':>5s} {'cov_min%':>8s} "
+          f"{'migrations':>10s}")
+    sk_frames, sk_of, sk_videos, sk_dets = make_skewed_streams(
+        6, args.frames, 1.0, 2)
+    sk_oracle = proxy_detect_fn_streams(sk_videos, sk_dets, sk_of)
+    for policy, extra in (("static", {}),
+                          ("stealing", {"rebalance": True,
+                                        "epoch_s": args.frames / 3})):
+        eng = ShardedDetectionEngine(
+            n_shards=2, detect_fn=sk_oracle, n_replicas=args.replicas,
+            service_time=0.36, drop_when_busy=True, **extra)
+        r = eng.serve(sk_frames)
+        cov = min(v["coverage"] for v in r["per_stream"].values())
+        moves = ", ".join(
+            f"cam{m['stream']}:{m['src']}->{m['dst']}@e{m['epoch']}"
+            for m in r.get("migrations", [])) or "-"
+        print(f"  {policy:>9s} {len(r['dropped']):5d} {cov*100:8.1f} "
+              f"{moves:>10s}")
+
     # the SPMD leg: the same engine with mesh= runs detection as ONE
     # jitted program spanning the (forced) 4-device mesh — this is
     # what the XLA_FLAGS line at the top is for
@@ -77,7 +105,7 @@ def main():
     import numpy as np
 
     from repro.launch.mesh import make_serving_mesh
-    from repro.serving import FrameRequest, ShardedDetectionEngine
+    from repro.serving import FrameRequest
 
     n_dev = min(4, len(jax.devices()))
     mesh = make_serving_mesh(n_dev)

@@ -71,6 +71,22 @@ class _Base:
     def assign(self, frame_idx: int, t: float) -> Optional[Assignment]:
         raise NotImplementedError
 
+    def reset(self):
+        """Clear per-serve dispatch state (the executors are owned by the
+        caller and reset separately).  Subclasses extend this with their
+        round bookkeeping so repeated ``serve()`` calls start from the
+        same virtual-clock origin."""
+        self.host_free_at = 0.0
+
+    def backlog(self, t: float) -> float:
+        """Residual committed work at virtual time ``t``: the summed
+        seconds of already-dispatched service that extend past ``t``
+        across all executors.  This is the load signal the sharded
+        serving layer's work-stealing policy consumes — 0.0 means every
+        executor would be idle at ``t``."""
+        return float(sum(max(0.0, e.busy_until - t)
+                         for e in self.executors))
+
     def blocking_assign(self, frame_idx: int, t: float = 0.0) -> Assignment:
         """Zero-drop dispatch: the frame waits (buffered) until this
         scheduler's policy can take it (no earlier than arrival ``t``).
@@ -111,6 +127,11 @@ class LockstepRRScheduler(_Base):
         self.rr_idx = 0
         self.round_barrier = 0.0
 
+    def reset(self):
+        super().reset()
+        self.rr_idx = 0
+        self.round_barrier = 0.0
+
     def assign(self, frame_idx, t):
         ex = self.executors[self.rr_idx]
         # the frame for this slot must wait for the round barrier
@@ -140,11 +161,21 @@ class WeightedRRScheduler(_Base):
     def __init__(self, executors, weights=None, **kw):
         super().__init__(executors, **kw)
         self.weights = weights or self._default_weights()
+        self._init_weights = list(self.weights)
         self._slots = self._expand()
         self.slot_idx = 0
         self.round_barrier = 0.0
         self._round_done = 0.0           # latest t_done in the open round
         self.rounds_completed = 0        # counts skip-crossings too
+
+    def reset(self):
+        super().reset()
+        self.weights = list(self._init_weights)
+        self._slots = self._expand()
+        self.slot_idx = 0
+        self.round_barrier = 0.0
+        self._round_done = 0.0
+        self.rounds_completed = 0
 
     def _default_weights(self):
         mus = np.array([e.mu_effective for e in self.executors])
@@ -208,7 +239,19 @@ class WeightedRRScheduler(_Base):
             self.round_barrier, self._round_done = barrier, round_done
             self.rounds_completed += rounds
             return a
-        return None                      # every slot backlogged -> drop
+        # every slot backlogged -> drop.  The scan still visited one full
+        # round of slots, so the bookkeeping it accumulated is NOT thrown
+        # away (the old code did, so ``rounds_completed`` undercounted and
+        # ``ProportionalScheduler`` froze its reweighting clock under
+        # exactly the total-backlog condition it exists to fix).  When the
+        # scan started at slot 0 the wrap edge sits at its end and was
+        # never crossed mid-scan; count it here so a failed full scan
+        # always closes exactly one round.
+        if self.slot_idx == 0:
+            barrier, round_done, rounds = round_done, 0.0, rounds + 1
+        self.round_barrier, self._round_done = barrier, round_done
+        self.rounds_completed += rounds
+        return None
 
     def blocking_assign(self, frame_idx, t: float = 0.0):
         j = self._slots[self.slot_idx]
@@ -232,6 +275,10 @@ class ProportionalScheduler(WeightedRRScheduler):
         self.update_period = update_period
         self._last_refresh = 0           # rounds_completed at last refresh
 
+    def reset(self):
+        super().reset()
+        self._last_refresh = 0
+
     def _maybe_refresh(self):
         # keyed off rounds_completed (which also counts rounds closed by
         # skip-crossings) rather than slot_idx == 0: a round that ends
@@ -243,9 +290,12 @@ class ProportionalScheduler(WeightedRRScheduler):
             self._refresh_weights()
 
     def assign(self, frame_idx, t):
+        # refresh even when the frame is dropped: a failed scan closes a
+        # round too (see WeightedRRScheduler.assign), and the reweighting
+        # clock must keep ticking under sustained total backlog — that is
+        # the drift condition the policy exists to correct
         a = super().assign(frame_idx, t)
-        if a is not None:
-            self._maybe_refresh()
+        self._maybe_refresh()
         return a
 
     def blocking_assign(self, frame_idx, t: float = 0.0):
@@ -254,9 +304,12 @@ class ProportionalScheduler(WeightedRRScheduler):
         return a
 
     def _refresh_weights(self):
-        ts = np.array([e.ewma_service if e.ewma_service else
-                       1.0 / e.mu_effective for e in self.executors])
-        rates = 1.0 / ts
+        # explicit None check: an EWMA of 0.0 (zero-cost oracle executor)
+        # is a real measurement, not "no data" — `ewma or fallback` used
+        # to silently fall back to the configured mu here
+        ts = np.array([1.0 / e.mu_effective if e.ewma_service is None
+                       else e.ewma_service for e in self.executors])
+        rates = 1.0 / np.maximum(ts, 1e-9)
         self.weights = np.maximum(1, np.round(rates / rates.min())) \
             .astype(int).tolist()
         self._slots = self._expand()

@@ -21,11 +21,12 @@ consumes unchanged.
 """
 from .engine import (DetectionEngine, DetectionResponse, FrameRequest,
                      ReplicaExecutor, Request, Response, ServingEngine)
-from .nvr import make_nvr_streams
+from .nvr import make_nvr_streams, make_skewed_streams
 from .sharded import (ShardedDetectionEngine, make_spmd_detect,
-                      merge_shard_reports)
+                      merge_epoch_shard_reports, merge_shard_reports)
 
 __all__ = ["DetectionEngine", "DetectionResponse", "FrameRequest",
            "Request", "Response", "ReplicaExecutor", "ServingEngine",
            "ShardedDetectionEngine", "make_nvr_streams",
-           "make_spmd_detect", "merge_shard_reports"]
+           "make_skewed_streams", "make_spmd_detect",
+           "merge_epoch_shard_reports", "merge_shard_reports"]

@@ -131,7 +131,11 @@ class ReplicaExecutor:
 
     @property
     def mu_effective(self) -> float:
-        t = self.ewma_service or self._last_wall * self.speed
+        # explicit None check: a measured EWMA of exactly 0.0 (zero-cost
+        # oracle detectors in tests) is data, not absence of data — the
+        # old `ewma or fallback` silently fell back to the wall estimate
+        t = (self._last_wall * self.speed if self.ewma_service is None
+             else self.ewma_service)
         return 1.0 / max(t, 1e-6)
 
     def service_time(self, frame=None) -> float:
@@ -142,6 +146,28 @@ class ReplicaExecutor:
         a = 0.3
         self.ewma_service = (t_service if self.ewma_service is None
                              else (1 - a) * self.ewma_service + a * t_service)
+
+    def reset(self):
+        """Clear per-serve virtual-clock state.  ``_last_wall`` (the warm
+        service estimate from warmup / the last measured batch) survives,
+        so a reset replica starts a new serve exactly like a
+        freshly-warmed one."""
+        self.busy_until = 0.0
+        self.n_processed = 0
+        self.ewma_service = None
+
+
+def _per_replica_counts(replicas, responses) -> Dict[int, int]:
+    """Per-CALL placement counts (``replica == -1`` tracker-interpolated
+    frames excluded): identical to the executors' cumulative
+    ``n_processed`` on a fresh or reset engine, but stays per-call when
+    virtual-clock state is carried across calls (the sharded epoch
+    loop), so report merges can sum counts without double counting."""
+    counts = {r.idx: 0 for r in replicas}
+    for resp in responses:
+        if resp.replica >= 0:
+            counts[resp.replica] += 1
+    return counts
 
 
 class ServingEngine:
@@ -200,17 +226,31 @@ class ServingEngine:
             r._last_wall = wall
         self._warm = True
 
+    def reset(self):
+        """Clear per-serve virtual-clock state (replica ``busy_until`` /
+        processed counts / EWMAs and the scheduler's round bookkeeping)
+        so repeated ``serve()`` calls are independent: the second call
+        sees idle replicas at t=0, exactly like the first."""
+        for r in self.replicas:
+            r.reset()
+        self.scheduler.reset()
+
     # ------------------------------------------------------------- serving
     def serve(self, requests: Sequence[Request]) -> Dict:
         """Run a batch of requests through the parallel-replica pipeline.
-        Returns responses (arrival order), dropped ids, and FPS metrics."""
+        Returns responses (arrival order), dropped ids, and FPS metrics.
+
+        Each call is independent: per-serve virtual-clock state is reset
+        on entry, and ``per_replica`` counts THIS call's placements (not
+        a lifetime cumulative), so two identical back-to-back calls
+        return identical reports."""
         if not requests:                  # empty report, like DetectionEngine
             return {"responses": [], "dropped": [], "throughput_rps": 0.0,
                     "p50_latency": 0.0,
-                    "per_replica": {r.idx: r.n_processed
-                                    for r in self.replicas}}
+                    "per_replica": {r.idx: 0 for r in self.replicas}}
         if not self._warm:
             self.warmup(max(len(r.tokens) for r in requests))
+        self.reset()
         responses: List[Response] = []
         dropped: List[int] = []
         for req in sorted(requests, key=lambda r: r.t_arrival):
@@ -235,7 +275,7 @@ class ServingEngine:
             "p50_latency": float(np.median(
                 [r.t_done - r.t_start for r in responses])) if responses
             else 0.0,
-            "per_replica": {r.idx: r.n_processed for r in self.replicas},
+            "per_replica": _per_replica_counts(self.replicas, responses),
         }
 
 
@@ -327,10 +367,39 @@ class DetectionEngine:
             _, wall = self._detect_batch(imgs, rids=[-1] * mb)
             per_frame = wall / mb
         else:
-            per_frame = self.service_time or 1e-3
+            per_frame = 1e-3
+        # explicit None check: a pinned ``service_time=0.0`` (zero-cost
+        # oracle) must pin the virtual clock to zero, not fall back to
+        # the measured wall the way `service_time or wall` did
+        if self.service_time is not None:
+            per_frame = self.service_time
         for r in self.replicas:
-            r._last_wall = self.service_time or per_frame
+            r._last_wall = per_frame
         self._warm = True
+
+    def reset(self):
+        """Clear per-serve virtual-clock state: replica ``busy_until`` /
+        processed counts / EWMAs and the scheduler's round bookkeeping.
+        Warm service estimates (``_last_wall``) and compiled programs
+        survive, so a reset engine starts the next ``serve`` exactly
+        like a freshly-warmed one."""
+        for r in self.replicas:
+            r.reset()
+        self.scheduler.reset()
+
+    def backlog_snapshot(self, t: float) -> Dict:
+        """Virtual-clock load observation at time ``t``, the signal the
+        sharded serving layer's work-stealing policy consumes:
+        ``busy_until`` per replica, ``backlog_s`` (summed committed
+        service extending past ``t`` — ``scheduler.backlog``) and
+        ``horizon_s`` (how far the busiest replica's commitment reaches
+        beyond ``t``).  Pure observation: reading it never perturbs the
+        clock."""
+        busy = [r.busy_until for r in self.replicas]
+        return {"t": t,
+                "busy_until": busy,
+                "horizon_s": max(max(busy, default=0.0) - t, 0.0),
+                "backlog_s": self.scheduler.backlog(t)}
 
     def _chunk_size(self, frames, i: int) -> int:
         """Queue depth at dispatch time: how many frames have arrived by
@@ -359,7 +428,9 @@ class DetectionEngine:
             b <<= 1
         return b
 
-    def serve(self, frames: Sequence[FrameRequest]) -> Dict:
+    def serve(self, frames: Sequence[FrameRequest], *, reset: bool = True,
+              stream_seq0: Optional[Dict[int, int]] = None,
+              stream_emit0: Optional[Dict[int, float]] = None) -> Dict:
         """Micro-batched detection serving: frames are grouped in arrival
         order into micro-batches (queue-depth-sized unless a fixed
         ``micro_batch`` was given), each batch runs through the batched
@@ -374,11 +445,30 @@ class DetectionEngine:
         per-stream coverage/FPS/drop accounting next to the global keys
         (see the module docstring for the multi-camera contract).
 
+        Each call is independent by default: per-serve virtual-clock
+        state (replica ``busy_until`` / counts / EWMAs, scheduler round
+        bookkeeping) is reset on entry and ``per_replica`` counts THIS
+        call's placements, so two identical back-to-back calls return
+        identical reports.  The keyword-only warm-start hooks exist for
+        callers that slice ONE logical trace into several calls (the
+        sharded epoch loop):
+
+        * ``reset=False`` carries the virtual clock and scheduler state
+          from the previous call instead of clearing them;
+        * ``stream_seq0`` maps ``stream_id -> first per-stream arrival
+          index of this call`` — its key set is the warm-start stream
+          set: every key appears in the report's per-stream maps even
+          with zero frames this call, and ``seq`` continues from the
+          given floor instead of restarting at 0;
+        * ``stream_emit0`` maps ``stream_id -> emit-clock floor``:
+          tracker-interpolated frames of that stream are never released
+          before it (per-stream emit monotonicity across calls).
+
         Report keys: ``responses`` (rid order), ``dropped`` (rids, in
         arrival order), ``coverage`` = responses/frames,
         ``interpolated`` (count of tracker-filled frames),
-        ``throughput_fps``, ``per_replica`` (frames per executor),
-        ``n_streams``, ``streams`` ({stream_id: responses in
+        ``throughput_fps``, ``per_replica`` (frames per executor, this
+        call), ``n_streams``, ``streams`` ({stream_id: responses in
         per-stream ``seq`` order}), ``emit_t`` ({stream_id: monotonic
         release clocks, same length as the stream's responses}),
         ``per_stream`` ({stream_id: frames / dropped / interpolated /
@@ -387,13 +477,22 @@ class DetectionEngine:
         ``track_and_interpolate``)."""
         if not self._warm:
             self.warmup()
+        if reset:
+            self.reset()
         frames = sorted(frames, key=lambda f: f.t_arrival)
-        # per-stream arrival index (seq): the k-th frame of each camera
-        n_frames_stream: Dict[int, int] = {}
+        # per-stream arrival index (seq): the k-th frame of each camera,
+        # offset by the warm-start floor when one epoch's sub-trace
+        # continues another's; n_frames_stream counts THIS call's frames
+        # (warm-start streams appear even with zero frames this call)
+        n_frames_stream: Dict[int, int] = {
+            sid: 0 for sid in (stream_seq0 or {})}
+        seq_next = dict(stream_seq0 or {})
         seq_of: Dict[int, int] = {}
         for f in frames:
-            seq_of[f.rid] = n_frames_stream.get(f.stream_id, 0)
-            n_frames_stream[f.stream_id] = seq_of[f.rid] + 1
+            seq_of[f.rid] = seq_next.get(f.stream_id, 0)
+            seq_next[f.stream_id] = seq_of[f.rid] + 1
+            n_frames_stream[f.stream_id] = \
+                n_frames_stream.get(f.stream_id, 0) + 1
         responses: List[DetectionResponse] = []
         dropped: List[FrameRequest] = []
         pad_to = self.micro_batch or None     # fixed mode: one jit shape
@@ -425,7 +524,8 @@ class DetectionEngine:
                 images = np.concatenate([images, pad], 0)
             (boxes, scores, classes, valid), wall = self._detect_batch(
                 images, rids=[f.rid for f in kept] + [-1] * (b - len(kept)))
-            per_frame = self.service_time or wall / len(kept)
+            per_frame = (wall / len(kept) if self.service_time is None
+                         else self.service_time)
             for r in self.replicas:
                 r._last_wall = per_frame
             if not self.drop_when_busy:
@@ -442,7 +542,8 @@ class DetectionEngine:
         interpolated = 0
         self._tracker_launches = self._tracker_ticks = 0
         if self.track_and_interpolate and (dropped or responses):
-            responses = self._interpolate(frames, responses)
+            responses = self._interpolate(frames, responses, seq_of,
+                                          stream_emit0 or {})
             interpolated = sum(r.interpolated for r in responses)
         responses.sort(key=lambda r: r.rid)       # sequence synchronizer
         makespan = max((r.t_done for r in responses), default=0.0)
@@ -473,7 +574,7 @@ class DetectionEngine:
             "coverage": len(responses) / max(len(frames), 1),
             "interpolated": interpolated,
             "throughput_fps": len(responses) / max(makespan, 1e-9),
-            "per_replica": {r.idx: r.n_processed for r in self.replicas},
+            "per_replica": _per_replica_counts(self.replicas, responses),
             "n_streams": len(n_frames_stream),
             "streams": streams,
             "emit_t": emit_t,    # per-stream monotonic release clocks
@@ -482,7 +583,8 @@ class DetectionEngine:
             "tracker_ticks": self._tracker_ticks,
         }
 
-    def _interpolate(self, frames, responses) -> List[DetectionResponse]:
+    def _interpolate(self, frames, responses, seq_of,
+                     emit0) -> List[DetectionResponse]:
         """ONE batched tracker over every camera stream, advanced in
         lockstep: tick k covers each stream's k-th arrival frame, and
         the whole (B, T) track table moves with a single ``trk.step``
@@ -507,7 +609,10 @@ class DetectionEngine:
         state = trk.init_state(B, cfg)
         by_rid = {r.rid: r for r in responses}
         D = responses[0].boxes.shape[0] if responses else 1
-        emit_t = {s: 0.0 for s in sids}
+        # warm-start emit floor: when this call continues a sliced trace
+        # (epoch loop), a stream's interpolated frames are never released
+        # before anything the PREVIOUS call already emitted for it
+        emit_t = {s: emit0.get(s, 0.0) for s in sids}
         ticks = max(len(v) for v in per.values())
         launches = 0
         out: List[DetectionResponse] = []
@@ -552,7 +657,7 @@ class DetectionEngine:
                     out.append(DetectionResponse(
                         f.rid, tb[b], ts[b], tc[b], emit[b], -1, t_ready,
                         t_ready, 0.0, interpolated=True,
-                        track_ids=tid[b], stream_id=s, seq=k))
+                        track_ids=tid[b], stream_id=s, seq=seq_of[f.rid]))
         self._tracker_launches = launches
         self._tracker_ticks = ticks
         return out

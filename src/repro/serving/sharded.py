@@ -43,7 +43,7 @@ import numpy as np
 from ..core.synchronizer import SequenceSynchronizer
 from ..sharding.context import mesh_context
 from ..sharding.serving_rules import (constrain_detections, constrain_frames,
-                                      shard_streams)
+                                      rebalance_streams, shard_streams)
 from .engine import DetectionEngine, FrameRequest
 
 
@@ -83,6 +83,52 @@ def make_spmd_detect(cfg, params, mesh, *, score_thr: float = 0.4,
     return detect
 
 
+def _renumber_and_collect(frames: Sequence[FrameRequest],
+                          reports: Sequence[Dict],
+                          report_shard: Sequence[int],
+                          pool_sizes: Sequence[int]):
+    """Shared merge scaffolding for ``merge_shard_reports`` (one report
+    per shard) and ``merge_epoch_shard_reports`` (one per epoch x
+    shard): renumber replica ids by the owning shard's pool offset (on
+    COPIES — never the caller's responses; offset 0 reuses the original
+    objects so single-shard reports stay bit-identical), collect
+    responses in rid order and dropped rids in global arrival order
+    (stable on ties, like the engine's own sort), sum the per-call
+    ``per_replica`` counts into the globally-renumbered map, and
+    rebuild the per-stream view from the merged responses with the
+    engine's own reorder helper — so ``streams`` holds the SAME objects
+    as ``responses``, the DetectionEngine contract.
+
+    Returns ``(responses, dropped, makespan, per_replica, streams,
+    emit_t)``."""
+    n_shards = len(pool_sizes)
+    offsets = [0] * n_shards
+    for h in range(1, n_shards):
+        offsets[h] = offsets[h - 1] + pool_sizes[h - 1]
+    per_replica: Dict[int, int] = {
+        offsets[h] + i: 0 for h in range(n_shards)
+        for i in range(pool_sizes[h])}
+    responses = []
+    for rep, h in zip(reports, report_shard):
+        off = offsets[h]
+        for idx, count in rep["per_replica"].items():
+            per_replica[off + idx] += count
+        for r in rep["responses"]:
+            if off and r.replica >= 0:
+                r = replace(r, replica=r.replica + off)
+            responses.append(r)
+    responses.sort(key=lambda r: r.rid)
+    pos = {f.rid: i for i, f in
+           enumerate(sorted(frames, key=lambda f: f.t_arrival))}
+    dropped = sorted((rid for rep in reports for rid in rep["dropped"]),
+                     key=pos.__getitem__)
+    makespan = max((r.t_done for r in responses), default=0.0)
+    ordered = SequenceSynchronizer.order_per_stream(responses)
+    streams = {sid: rs for sid, (rs, _) in ordered.items()}
+    emit_t = {sid: em for sid, (_, em) in ordered.items()}
+    return responses, dropped, makespan, per_replica, streams, emit_t
+
+
 def merge_shard_reports(frames: Sequence[FrameRequest],
                         reports: Sequence[Dict],
                         pool_sizes: Sequence[int]) -> Dict:
@@ -103,36 +149,22 @@ def merge_shard_reports(frames: Sequence[FrameRequest],
 
     Adds the shard-level view on top: ``n_shards`` and ``per_shard``
     (per-shard frame/response/drop/tracker counts).  The caller attaches
-    ``shard_of_stream``."""
+    ``shard_of_stream``.
+
+    Tracker accounting across shards: each shard runs its OWN lockstep
+    tracker, so the merged ``tracker_launches`` SUMS over shards while
+    ``tracker_ticks`` is the MAX (the shards tick in parallel, not in
+    series).  The single-engine invariant "one launch per tick" thus
+    reads globally as ``launches == n_shards x ticks`` — exact when
+    every shard saw the same tick count (balanced frames-per-stream),
+    an upper bound on ``ticks`` otherwise."""
     # renumber replica ids on COPIES (never mutate the caller's shard
     # reports), keeping the -1 tracker-interpolated sentinel; offset 0
     # (first shard / single shard) reuses the original objects so the
     # shards=1 report stays bit-identical
-    responses = []
-    per_replica: Dict[int, int] = {}
-    offset = 0
-    for rep, n_pool in zip(reports, pool_sizes):
-        for idx, count in rep["per_replica"].items():
-            per_replica[offset + idx] = count
-        for r in rep["responses"]:
-            if offset and r.replica >= 0:
-                r = replace(r, replica=r.replica + offset)
-            responses.append(r)
-        offset += n_pool
-    responses.sort(key=lambda r: r.rid)
-    # global arrival order (stable on ties, like the engine's own sort)
-    pos = {f.rid: i for i, f in
-           enumerate(sorted(frames, key=lambda f: f.t_arrival))}
-    dropped = sorted((rid for rep in reports for rid in rep["dropped"]),
-                     key=pos.__getitem__)
-    makespan = max((r.t_done for r in responses), default=0.0)
-    # rebuild the per-stream view from the (possibly copied) merged
-    # responses with the engine's own reorder helper, so ``streams``
-    # holds the SAME objects as ``responses`` — the DetectionEngine
-    # contract; per-stream stats merge by union (streams are disjoint)
-    ordered = SequenceSynchronizer.order_per_stream(responses)
-    streams = {sid: rs for sid, (rs, _) in ordered.items()}
-    emit_t = {sid: em for sid, (_, em) in ordered.items()}
+    responses, dropped, makespan, per_replica, streams, emit_t = \
+        _renumber_and_collect(frames, reports, range(len(reports)),
+                              pool_sizes)
     per_stream: Dict[int, Dict] = {}
     for rep in reports:
         per_stream.update(rep["per_stream"])
@@ -167,6 +199,80 @@ def merge_shard_reports(frames: Sequence[FrameRequest],
     }
 
 
+def merge_epoch_shard_reports(frames: Sequence[FrameRequest],
+                              reports: Sequence[Dict],
+                              report_shard: Sequence[int],
+                              pool_sizes: Sequence[int]) -> Dict:
+    """Merge per-(epoch, shard) ``DetectionEngine.serve`` reports into
+    one global engine report — the epoch-loop generalization of
+    ``merge_shard_reports``.
+
+    Unlike the single-epoch merge, a stream may appear in SEVERAL
+    reports (later epochs, and — after a migration — a different
+    shard), so per-stream stats are SUMMED across reports instead of
+    unioned, and the per-stream response order / emit clocks are
+    rebuilt globally from the merged responses (``rid`` stays globally
+    unique and ``seq`` is the global per-stream arrival index thanks to
+    the engines' warm-start floors, so the rebuild is exact).  Replica
+    ids renumber by shard exactly as in ``merge_shard_reports``; per-
+    call ``per_replica`` counts sum across epochs.  ``per_shard``
+    aggregates each shard over its epochs (its ``streams`` list names
+    every stream the shard served at least one frame for — a migrated
+    stream legitimately shows up on two shards).  Global
+    ``tracker_launches`` sums over shards AND epochs; global
+    ``tracker_ticks`` is the max over shards of each shard's summed
+    epoch ticks (shards tick in parallel, epochs in series).  The
+    caller attaches ``shard_of_stream`` / ``migrations`` /
+    ``n_epochs``."""
+    n_shards = len(pool_sizes)
+    responses, dropped, makespan, per_replica, streams, emit_t = \
+        _renumber_and_collect(frames, reports, report_shard, pool_sizes)
+    per_stream: Dict[int, Dict] = {}
+    per_shard = [{"streams": set(), "frames": 0, "responses": 0,
+                  "dropped": 0, "interpolated": 0, "tracker_launches": 0,
+                  "tracker_ticks": 0} for _ in range(n_shards)]
+    for rep, h in zip(reports, report_shard):
+        for sid, v in rep["per_stream"].items():
+            agg = per_stream.setdefault(
+                sid, {"frames": 0, "dropped": 0, "interpolated": 0})
+            agg["frames"] += v["frames"]
+            agg["dropped"] += v["dropped"]
+            agg["interpolated"] += v["interpolated"]
+            if v["frames"]:
+                per_shard[h]["streams"].add(sid)
+            per_shard[h]["frames"] += v["frames"]
+        per_shard[h]["responses"] += len(rep["responses"])
+        per_shard[h]["dropped"] += len(rep["dropped"])
+        per_shard[h]["interpolated"] += rep["interpolated"]
+        per_shard[h]["tracker_launches"] += rep["tracker_launches"]
+        per_shard[h]["tracker_ticks"] += rep["tracker_ticks"]
+    for sh in per_shard:
+        sh["streams"] = sorted(sh["streams"])
+    for sid, agg in per_stream.items():
+        rs = streams.setdefault(sid, [])
+        em = emit_t.setdefault(sid, [])
+        agg["coverage"] = len(rs) / max(agg["frames"], 1)
+        agg["throughput_fps"] = len(rs) / max(em[-1] if em else 0.0, 1e-9)
+    return {
+        "responses": responses,
+        "dropped": dropped,
+        "coverage": len(responses) / max(len(frames), 1),
+        "interpolated": sum(rep["interpolated"] for rep in reports),
+        "throughput_fps": len(responses) / max(makespan, 1e-9),
+        "per_replica": per_replica,
+        "n_streams": len(per_stream),
+        "streams": streams,
+        "emit_t": emit_t,
+        "per_stream": per_stream,
+        "tracker_launches": sum(rep["tracker_launches"]
+                                for rep in reports),
+        "tracker_ticks": max((sh["tracker_ticks"] for sh in per_shard),
+                             default=0),
+        "n_shards": n_shards,
+        "per_shard": per_shard,
+    }
+
+
 class ShardedDetectionEngine:
     """NVR detection serving partitioned over mesh shards.
 
@@ -189,6 +295,29 @@ class ShardedDetectionEngine:
     service clock, not the compiled program.  Off-mesh (``mesh=None``)
     the engines keep today's per-host scheduler path.
 
+    Cross-shard work stealing (``rebalance=True``): the static
+    ``shard_streams`` partition drops frames on a shard whose cameras
+    go bursty while a neighboring shard idles — the paper's §III rate
+    mismatch, recreated between shards.  With rebalancing on, ``serve``
+    splits the trace into ``epoch_s``-second virtual-time epochs; after
+    each epoch every shard's backlog/drop pressure is observed
+    (``DetectionEngine.backlog_snapshot`` + the epoch report) and
+    ``sharding.serving_rules.rebalance_streams`` — a pure deterministic
+    function of those observations, so replicated dispatchers agree
+    without coordinating — migrates up to ``max_moves_per_epoch`` whole
+    camera streams from the most pressured shard to the least pressured
+    one.  Migration happens ONLY at epoch boundaries: within an epoch
+    no tracker state moves; at the boundary every shard's lockstep
+    tracker re-seeds from the new epoch's first detections (trackers
+    are per-``serve`` state, and the epoch loop serves each shard once
+    per epoch), while a migrated stream's per-stream ``seq`` and emit
+    clock carry to its new shard through the engines' warm-start
+    ``stream_seq0`` / ``stream_emit0`` floors — so per-stream ordering
+    and emit monotonicity survive migration, and nothing is silently
+    reset mid-epoch.  ``rebalance=False`` (the default) and
+    ``n_shards=1`` (no peer to steal from) keep the static single-pass
+    path, bit-identical to the pre-stealing engine.
+
     Example::
 
         mesh = make_serving_mesh(4)            # 4-shard host mesh
@@ -202,9 +331,16 @@ class ShardedDetectionEngine:
     def __init__(self, n_shards: int = 1, mesh=None, cfg=None, params=None,
                  seed: int = 0, detect_fn=None, use_pallas: bool = False,
                  score_thr: float = 0.4, iou_thr: float = 0.5,
-                 max_out: int = 32, **engine_kwargs):
+                 max_out: int = 32, rebalance: bool = False,
+                 epoch_s: float = 4.0, max_moves_per_epoch: int = 1,
+                 **engine_kwargs):
         if n_shards < 1:
             raise ValueError(f"n_shards must be >= 1, got {n_shards}")
+        if epoch_s <= 0:
+            raise ValueError(f"epoch_s must be > 0, got {epoch_s}")
+        self.rebalance = rebalance
+        self.epoch_s = epoch_s
+        self.max_moves_per_epoch = max_moves_per_epoch
         if mesh is not None and detect_fn is not None:
             raise ValueError(
                 "mesh= (SPMD detect) and detect_fn= (host-side oracle) "
@@ -287,11 +423,28 @@ class ShardedDetectionEngine:
         ``rid`` stays globally unique and ``seq`` is per-stream, so
         responses and quality accounting are unaffected by WHICH shard
         served a camera; only drop/latency behaviour depends on the
-        per-shard pools."""
+        per-shard pools.
+
+        With ``rebalance=True`` (and more than one shard) the trace is
+        served in ``epoch_s`` virtual-second epochs with cross-shard
+        work stealing between them (see the class docstring); the
+        report gains ``migrations`` (one ``{"epoch", "stream", "src",
+        "dst"}`` record per executed move) and ``n_epochs``, and
+        ``shard_of_stream`` reflects the FINAL partition."""
         if self._shared_detect is not None:
             self.warmup()
         shard_of = shard_streams((f.stream_id for f in frames),
                                  self.n_shards)
+        if not self.rebalance or self.n_shards == 1 or not frames:
+            return self._serve_static(frames, shard_of)
+        return self._serve_rebalancing(frames, shard_of)
+
+    def _serve_static(self, frames: Sequence[FrameRequest],
+                      shard_of: Dict[int, int]) -> Dict:
+        """The pre-stealing single-pass path: one serve per shard under
+        the fixed ``shard_streams`` partition (bit-identical to the
+        engine before work stealing existed — the regression bar for
+        ``rebalance=False`` and ``n_shards=1``)."""
         per_shard_frames: List[List[FrameRequest]] = [
             [] for _ in range(self.n_shards)]
         for f in frames:                      # preserves caller order
@@ -302,4 +455,84 @@ class ShardedDetectionEngine:
                                   [len(eng.replicas)
                                    for eng in self.engines])
         out["shard_of_stream"] = shard_of
+        return out
+
+    def _serve_rebalancing(self, frames: Sequence[FrameRequest],
+                           shard_of: Dict[int, int]) -> Dict:
+        """Epoch loop: serve → observe → rebalance → migrate.
+
+        Epochs are fixed ``epoch_s`` virtual-time windows anchored at
+        the first arrival.  Within an epoch every shard serves its
+        sub-trace with the virtual clock CARRIED from the previous
+        epoch (``reset`` only on the first), so backlog built up under
+        a mis-partition is not forgiven at the boundary — it is exactly
+        the pressure signal the policy reads.  After each epoch the
+        per-shard observations (drops, residual backlog at the epoch's
+        last arrival, per-stream frame counts) feed
+        ``rebalance_streams``; migrated streams start the next epoch on
+        their new shard with their ``seq`` / emit-clock floors carried
+        over (warm-start), and every shard's lockstep tracker re-seeds
+        from the new epoch's first detections — the explicit epoch-
+        boundary handoff, never a silent mid-epoch reset."""
+        frames = sorted(frames, key=lambda f: f.t_arrival)
+        t0 = frames[0].t_arrival
+        windows: List[List[FrameRequest]] = []
+        for f in frames:
+            e = int((f.t_arrival - t0) // self.epoch_s)
+            while len(windows) <= e:
+                windows.append([])
+            windows[e].append(f)
+        # serve only the non-empty windows (an empty burst gap yields no
+        # observations to rebalance on) but keep their RAW window
+        # indices: reported migration epochs and ``n_epochs`` stay in
+        # fixed-window coordinates, so ``t0 + (epoch + 1) * epoch_s`` is
+        # the virtual time a recorded move took effect even across gaps
+        epochs = [(e, ef) for e, ef in enumerate(windows) if ef]
+        shard_of = dict(shard_of)
+        pool_sizes = [len(eng.replicas) for eng in self.engines]
+        seq0: Dict[int, int] = {}
+        emit0: Dict[int, float] = {}
+        reports: List[Dict] = []
+        report_shard: List[int] = []
+        migrations: List[Dict] = []
+        for i, (raw_e, ef) in enumerate(epochs):
+            subs: List[List[FrameRequest]] = [
+                [] for _ in range(self.n_shards)]
+            for f in ef:
+                subs[shard_of[f.stream_id]].append(f)
+            t_end = ef[-1].t_arrival
+            observations = []
+            for h, (eng, sub) in enumerate(zip(self.engines, subs)):
+                warm = {sid: seq0.get(sid, 0)
+                        for sid, hh in shard_of.items() if hh == h}
+                rep = eng.serve(sub, reset=(i == 0), stream_seq0=warm,
+                                stream_emit0={sid: emit0[sid]
+                                              for sid in warm
+                                              if sid in emit0})
+                reports.append(rep)
+                report_shard.append(h)
+                observations.append({
+                    "drops": len(rep["dropped"]),
+                    "backlog_s":
+                        eng.backlog_snapshot(t_end)["backlog_s"],
+                    "frames": {sid: v["frames"]
+                               for sid, v in rep["per_stream"].items()},
+                })
+                for sid, v in rep["per_stream"].items():
+                    seq0[sid] = seq0.get(sid, 0) + v["frames"]
+                for sid, em in rep["emit_t"].items():
+                    if em:
+                        emit0[sid] = max(emit0.get(sid, 0.0), em[-1])
+            if i < len(epochs) - 1:
+                shard_of, moves = rebalance_streams(
+                    shard_of, observations,
+                    max_moves=self.max_moves_per_epoch)
+                migrations += [{"epoch": raw_e, "stream": sid,
+                                "src": src, "dst": dst}
+                               for sid, src, dst in moves]
+        out = merge_epoch_shard_reports(frames, reports, report_shard,
+                                        pool_sizes)
+        out["shard_of_stream"] = shard_of
+        out["migrations"] = migrations
+        out["n_epochs"] = len(windows)
         return out

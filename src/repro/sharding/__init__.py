@@ -6,11 +6,12 @@ from .context import (active_mesh, constrain, mesh_context, logical_to_mesh,
                       resolve_spec)
 from .rules import param_specs, param_shardings, batch_spec, input_shardings
 from .serving_rules import (constrain_detections, constrain_frames,
-                            shard_streams, streams_of_shard)
+                            rebalance_streams, shard_streams,
+                            streams_of_shard)
 
 __all__ = [
     "active_mesh", "constrain", "mesh_context", "logical_to_mesh",
     "resolve_spec", "param_specs", "param_shardings", "batch_spec",
     "input_shardings", "constrain_detections", "constrain_frames",
-    "shard_streams", "streams_of_shard",
+    "rebalance_streams", "shard_streams", "streams_of_shard",
 ]

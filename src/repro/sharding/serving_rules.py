@@ -32,10 +32,17 @@ Camera partition
 of camera ids to mesh shards that ``ShardedDetectionEngine`` uses to
 split the NVR request trace.  It is deterministic (sorted round-robin)
 so two hosts computing the partition independently agree on it.
+
+``rebalance_streams`` is the runtime correction to that static split —
+the cross-shard work-stealing rule.  It consumes only *observations*
+(per-shard drop counts, backlog horizons, per-stream frame counts from
+one served epoch) and is a pure deterministic function of them, so
+every host replaying the same epoch report computes the same
+migration without coordinating.
 """
 from __future__ import annotations
 
-from typing import Dict, Iterable, List
+from typing import Dict, Iterable, List, Sequence, Tuple
 
 from .context import constrain
 
@@ -96,3 +103,94 @@ def streams_of_shard(shard_of: Dict[int, int], shard: int) -> List[int]:
     [0, 2]
     """
     return sorted(s for s, h in shard_of.items() if h == shard)
+
+
+def rebalance_streams(shard_of: Dict[int, int], loads: Sequence[Dict],
+                      max_moves: int = 1
+                      ) -> Tuple[Dict[int, int], List[Tuple[int, int, int]]]:
+    """Cross-shard work stealing: migrate whole camera streams from the
+    most pressured shard to the least pressured one, based on one served
+    epoch's observations.
+
+    ``loads[h]`` is shard ``h``'s observation for the epoch:
+
+    * ``drops``     — frames shard ``h`` dropped (the primary pressure
+      signal: the paper's rate-mismatch pathology made visible);
+    * ``backlog_s`` — residual committed service at the epoch's end
+      (``DetectionEngine.backlog_snapshot``: pressure that has not yet
+      turned into drops — the early-warning signal);
+    * ``frames``    — ``{stream_id: frames observed this epoch}``, the
+      per-stream arrival-rate estimate migrations are sized by.
+
+    Policy (rationale):
+
+    1. *Donor* = lexicographically max ``(drops, backlog_s)`` shard,
+       *receiver* = min; a move requires donor pressure STRICTLY above
+       receiver pressure, so a balanced system never churns.
+    2. Candidate streams are the donor's, heaviest observed first (the
+       fastest camera is the one whose departure relieves the most
+       rate mismatch), ties broken by lowest stream id.
+    3. A candidate only moves if ``receiver_load + stream <
+       donor_load`` in observed frames — the move must strictly shrink
+       the maximum per-shard load, which rules out ping-ponging a hot
+       stream between shards and refuses "moves" that just relocate
+       the overload (e.g. a donor with a single hot stream).
+    4. At most ``max_moves`` migrations per call (whole streams only —
+       a stream's frames never split across shards inside an epoch, so
+       per-stream ordering survives migration untouched).
+
+    Deterministic: every choice is totally ordered (ties fall back to
+    shard/stream ids), and only the observation values matter — not
+    dict insertion order — so replicas that saw the same epoch report
+    agree on the migration without communicating.
+
+    Returns ``(new_shard_of, moves)`` with ``moves`` a list of
+    ``(stream_id, src_shard, dst_shard)``; the input mapping is not
+    mutated.
+
+    >>> of = {0: 0, 2: 0, 4: 0, 1: 1, 3: 1, 5: 1}
+    >>> loads = [{"drops": 9, "backlog_s": 3.0,
+    ...           "frames": {0: 16, 2: 16, 4: 16}},
+    ...          {"drops": 0, "backlog_s": 0.0,
+    ...           "frames": {1: 8, 3: 8, 5: 8}}]
+    >>> rebalance_streams(of, loads)
+    ({0: 1, 2: 0, 4: 0, 1: 1, 3: 1, 5: 1}, [(0, 0, 1)])
+    >>> balanced = [{"drops": 0, "backlog_s": 0.0, "frames": {0: 8}},
+    ...             {"drops": 0, "backlog_s": 0.0, "frames": {1: 8}}]
+    >>> rebalance_streams({0: 0, 1: 1}, balanced)
+    ({0: 0, 1: 1}, [])
+    """
+    n = len(loads)
+    shard_of = dict(shard_of)
+    moves: List[Tuple[int, int, int]] = []
+    # per-stream observed frames (each stream served by exactly one
+    # shard per epoch; the count rides along when the stream moves)
+    stream_frames: Dict[int, int] = {}
+    for load in loads:
+        for sid, c in load["frames"].items():
+            stream_frames[sid] = stream_frames.get(sid, 0) + int(c)
+    pressure = [(int(load["drops"]), float(load["backlog_s"]))
+                for load in loads]
+    for _ in range(max_moves):
+        shard_load = [sum(stream_frames.get(sid, 0)
+                          for sid, h in shard_of.items() if h == hh)
+                      for hh in range(n)]
+        donor = max(range(n), key=lambda h: (pressure[h], shard_load[h],
+                                             -h))
+        recv = min(range(n), key=lambda h: (pressure[h], shard_load[h],
+                                            h))
+        if donor == recv or pressure[donor] <= pressure[recv]:
+            break                        # no pressure gradient -> stable
+        cands = sorted((sid for sid, h in shard_of.items()
+                        if h == donor and stream_frames.get(sid, 0) > 0),
+                       key=lambda sid: (-stream_frames[sid], sid))
+        moved = None
+        for sid in cands:
+            if shard_load[recv] + stream_frames[sid] < shard_load[donor]:
+                moved = sid
+                break
+        if moved is None:
+            break                        # every move would just relocate it
+        shard_of[moved] = recv
+        moves.append((moved, donor, recv))
+    return shard_of, moves

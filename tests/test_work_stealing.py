@@ -1,0 +1,343 @@
+"""Cross-shard work stealing for sharded NVR serving, plus the
+scheduler / engine-state correctness satellites that ride along.
+
+Tentpole invariants: the ``rebalance_streams`` policy is a pure
+deterministic function of load observations (multi-host replicas must
+agree without coordinating); on a skewed trace work stealing strictly
+reduces total drops while never costing ANY stream coverage; a
+migrated stream's per-stream ``seq``/ordering and emit monotonicity
+survive the epoch-boundary handoff; and ``rebalance=False`` (and
+``n_shards=1``) stay bit-identical to the pre-stealing engine.
+
+Satellite regressions (failing before / passing after):
+``WeightedRRScheduler.assign``'s drop path used to throw away the
+round bookkeeping its scan accumulated, freezing the Proportional
+reweighting clock under total backlog; ``x or fallback`` patterns
+silently discarded legitimately-zero service times; and virtual-clock
+state leaked across repeated ``serve()`` calls."""
+import numpy as np
+import pytest
+
+from repro.core import proxy_detect_fn_streams
+from repro.core.scheduler import make_scheduler
+from repro.serving import (DetectionEngine, FrameRequest, ReplicaExecutor,
+                           ShardedDetectionEngine, make_nvr_streams,
+                           make_skewed_streams, merge_shard_reports)
+from repro.sharding import rebalance_streams, shard_streams
+from test_sharded_serving import assert_reports_identical
+
+SKEW_KW = dict(n_frames=12, rate=1.0)     # smoke-sized skewed trace
+ENGINE_KW = dict(n_replicas=2, service_time=0.36)
+
+
+def skewed_setup(n_shards, mode="drop", **kw):
+    n_streams = 3 * n_shards
+    frames, frame_of, videos, dets = make_skewed_streams(
+        n_streams, n_shards=n_shards, **SKEW_KW)
+    oracle = proxy_detect_fn_streams(videos, dets, frame_of)
+    mode_kw = ({"drop_when_busy": True} if mode == "drop"
+               else {"track_and_interpolate": True})
+    return frames, dict(detect_fn=oracle, n_shards=n_shards,
+                        **ENGINE_KW, **mode_kw, **kw)
+
+
+# ------------------------------------------------- rebalance policy unit
+def test_rebalance_streams_pure_and_deterministic():
+    """Same observations -> same migration, input never mutated: the
+    property that lets replicated dispatchers agree without talking."""
+    of = {0: 0, 2: 0, 4: 0, 1: 1, 3: 1, 5: 1}
+    loads = [{"drops": 7, "backlog_s": 2.5,
+              "frames": {0: 16, 2: 16, 4: 16}},
+             {"drops": 0, "backlog_s": 0.0, "frames": {1: 8, 3: 8, 5: 8}}]
+    before = dict(of)
+    a = rebalance_streams(of, loads)
+    b = rebalance_streams(dict(reversed(list(of.items()))), loads)
+    assert of == before                       # pure: no mutation
+    assert a[0] == b[0] and a[1] == b[1]      # insertion-order free
+    new_of, moves = a
+    assert moves == [(0, 0, 1)]               # heaviest stream, lowest id
+    assert new_of[0] == 1
+    # the move strictly shrank the max observed per-shard load
+    load = lambda h, part: sum(16 if s % 2 == 0 else 8
+                               for s, hh in part.items() if hh == h)
+    assert max(load(h, new_of) for h in (0, 1)) \
+        < max(load(h, of) for h in (0, 1))
+
+
+def test_rebalance_streams_stable_when_balanced_or_futile():
+    """No pressure gradient -> no churn; a donor whose every move would
+    just relocate the overload keeps its streams."""
+    balanced = [{"drops": 0, "backlog_s": 0.0, "frames": {0: 8, 2: 8}},
+                {"drops": 0, "backlog_s": 0.0, "frames": {1: 8, 3: 8}}]
+    of = {0: 0, 2: 0, 1: 1, 3: 1}
+    assert rebalance_streams(of, balanced) == (of, [])
+    # single hot stream: moving it would make the receiver the donor
+    hot = [{"drops": 9, "backlog_s": 4.0, "frames": {0: 32}},
+           {"drops": 0, "backlog_s": 0.0, "frames": {1: 8}}]
+    assert rebalance_streams({0: 0, 1: 1}, hot) == ({0: 0, 1: 1}, [])
+
+
+# ------------------------------------------- skewed-trace acceptance bar
+@pytest.mark.parametrize("n_shards", [2, 4])
+def test_stealing_reduces_drops_and_never_costs_coverage(n_shards):
+    """The PR acceptance bar: on the 2x-rate skewed trace, work
+    stealing strictly reduces total drops vs the static partition and
+    every stream's coverage is >= its static coverage."""
+    frames, kw = skewed_setup(n_shards)
+    static = ShardedDetectionEngine(**kw).serve(frames)
+    steal = ShardedDetectionEngine(rebalance=True, epoch_s=4.0,
+                                   **kw).serve(frames)
+    assert len(static["dropped"]) > 0          # the trace really skews
+    assert len(steal["dropped"]) < len(static["dropped"])
+    for sid, v in static["per_stream"].items():
+        assert steal["per_stream"][sid]["coverage"] >= v["coverage"], sid
+    assert steal["migrations"], "no migration on a skewed trace"
+    m = steal["migrations"][0]
+    assert m["src"] == 0                       # the overloaded shard
+    assert steal["shard_of_stream"][m["stream"]] == m["dst"]
+    # per-stream drop accounting still sums to the global list
+    assert sum(v["dropped"] for v in steal["per_stream"].values()) \
+        == len(steal["dropped"])
+    assert sum(v["frames"] for v in steal["per_stream"].values()) \
+        == len(frames)
+
+
+def test_migration_determinism_across_engines():
+    """Two engines fed the same trace (same observations) must choose
+    the same migrations and produce identical reports."""
+    frames, kw = skewed_setup(2)
+    outs = [ShardedDetectionEngine(rebalance=True, epoch_s=4.0,
+                                   **kw).serve(frames) for _ in range(2)]
+    a, b = outs
+    assert a["migrations"] == b["migrations"]
+    assert a["shard_of_stream"] == b["shard_of_stream"]
+    assert a["dropped"] == b["dropped"]
+    assert [(r.rid, r.replica, r.t_done) for r in a["responses"]] \
+        == [(r.rid, r.replica, r.t_done) for r in b["responses"]]
+
+
+def test_epoch_indices_stay_in_fixed_window_coordinates():
+    """An empty burst-gap window is skipped for serving but still
+    counted: recorded migration epochs and ``n_epochs`` stay in fixed
+    ``epoch_s``-window coordinates, so ``t0 + (epoch + 1) * epoch_s``
+    is the virtual time a move took effect even across gaps."""
+    frames, kw = skewed_setup(2)
+    base = ShardedDetectionEngine(rebalance=True, epoch_s=4.0,
+                                  **kw).serve(frames)
+    # open a one-window arrival gap after the first epoch
+    shifted = [FrameRequest(f.rid, f.image,
+                            f.t_arrival + (4.0 if f.t_arrival >= 4.0
+                                           else 0.0), f.stream_id)
+               for f in frames]
+    out = ShardedDetectionEngine(rebalance=True, epoch_s=4.0,
+                                 **kw).serve(shifted)
+    assert base["n_epochs"] == 3 and out["n_epochs"] == 4
+    assert [m["epoch"] for m in base["migrations"]] == [0]
+    assert [m["epoch"] for m in out["migrations"]] == [0]
+
+
+# --------------------------------------- migration ordering / handoff
+def test_seq_order_and_emit_monotone_across_migration():
+    """A migrated stream keeps its global per-stream ``seq`` (contiguous
+    from 0 across the epoch boundary) and monotone emit clocks; track
+    mode keeps full coverage through the handoff."""
+    frames, kw = skewed_setup(2, mode="track")
+    out = ShardedDetectionEngine(rebalance=True, epoch_s=4.0,
+                                 **kw).serve(frames)
+    assert out["migrations"]
+    moved = out["migrations"][0]["stream"]
+    per_sid_total = {}
+    for f in frames:
+        per_sid_total[f.stream_id] = per_sid_total.get(f.stream_id, 0) + 1
+    for sid, rs in out["streams"].items():
+        assert [r.seq for r in rs] == list(range(per_sid_total[sid])), sid
+        em = out["emit_t"][sid]
+        assert em == sorted(em), sid
+        assert out["per_stream"][sid]["coverage"] == 1.0, sid
+    # the migrated stream's responses span both shards' replica pools
+    pools = {h: set(range(2 * h, 2 * h + 2)) for h in range(2)}
+    used = {r.replica for r in out["streams"][moved] if r.replica >= 0}
+    assert used & pools[0] and used & pools[1], used
+    # rid stays the join key: every response maps back to its frame
+    by_rid = {f.rid: f for f in frames}
+    for r in out["responses"]:
+        assert by_rid[r.rid].stream_id == r.stream_id
+
+
+def test_stream_relabel_invariance_under_migration():
+    """Relabeling cameras with an order-preserving map must not change
+    WHAT the policy does — same drop counts, same migration structure,
+    same per-stream coverages under the relabel map."""
+    def run(relabel):
+        frames, frame_of, videos, dets = make_skewed_streams(
+            6, n_shards=2, **SKEW_KW)
+        frames = [FrameRequest(f.rid, f.image, f.t_arrival,
+                               relabel(f.stream_id)) for f in frames]
+        frame_of = {rid: (relabel(s), k)
+                    for rid, (s, k) in frame_of.items()}
+        videos = {relabel(s): v for s, v in videos.items()}
+        dets = {relabel(s): d for s, d in dets.items()}
+        oracle = proxy_detect_fn_streams(videos, dets, frame_of)
+        eng = ShardedDetectionEngine(n_shards=2, detect_fn=oracle,
+                                     rebalance=True, epoch_s=4.0,
+                                     drop_when_busy=True, **ENGINE_KW)
+        return eng.serve(frames)
+    a, b = run(lambda s: s), run(lambda s: s + 17)
+    assert a["dropped"] == b["dropped"]        # rids are label-free
+    assert [(m["epoch"], m["stream"] + 17, m["src"], m["dst"])
+            for m in a["migrations"]] == \
+        [(m["epoch"], m["stream"], m["src"], m["dst"])
+         for m in b["migrations"]]
+    for sid, v in a["per_stream"].items():
+        assert b["per_stream"][sid + 17]["coverage"] == v["coverage"]
+
+
+# ------------------------------------------------- bit-identity bars
+@pytest.mark.parametrize("mode", ["drop", "track"])
+def test_rebalance_off_bit_identical_to_static_partition(mode):
+    """``rebalance=False`` must reproduce the pre-stealing engine
+    exactly: per-shard DetectionEngines under the static partition +
+    ``merge_shard_reports``, key for key, bit for bit."""
+    frames, frame_of, videos, dets = make_nvr_streams(4, 10, rate=4.0)
+    oracle = proxy_detect_fn_streams(videos, dets, frame_of)
+    mode_kw = ({"drop_when_busy": True} if mode == "drop"
+               else {"track_and_interpolate": True})
+    kw = dict(n_replicas=1, service_time=0.3, **mode_kw)
+    sh = ShardedDetectionEngine(n_shards=2, detect_fn=oracle,
+                                rebalance=False, **kw).serve(frames)
+    part = shard_streams(range(4), 2)
+    subs = [[f for f in frames if part[f.stream_id] == h]
+            for h in range(2)]
+    reports = [DetectionEngine(detect_fn=oracle, **kw).serve(s)
+               for s in subs]
+    manual = merge_shard_reports(frames, reports, [1, 1])
+    assert_reports_identical(manual, sh)
+    assert "migrations" not in sh              # static path adds no keys
+
+
+def test_single_shard_ignores_rebalance_flag():
+    """``n_shards=1`` has no peer to steal from: rebalance=True must
+    fall back to the static path, bit-identical to DetectionEngine."""
+    frames, frame_of, videos, dets = make_nvr_streams(3, 8, rate=3.0)
+    oracle = proxy_detect_fn_streams(videos, dets, frame_of)
+    kw = dict(detect_fn=oracle, n_replicas=2, service_time=0.2,
+              drop_when_busy=True)
+    base = DetectionEngine(**kw).serve(frames)
+    sh = ShardedDetectionEngine(n_shards=1, rebalance=True,
+                                epoch_s=1.0, **kw).serve(frames)
+    assert_reports_identical(base, sh)
+    assert "migrations" not in sh
+
+
+# =================================================== satellite regressions
+# ---- 1. WRR drop path must not discard round bookkeeping ---------------
+def test_wrr_drop_path_advances_round_clock():
+    """Every failed full scan (all slots backlogged -> frame dropped)
+    closes exactly one round; the old code threw the scan's bookkeeping
+    away, so ``rounds_completed`` froze under total backlog."""
+    execs = [ReplicaExecutor(i) for i in range(3)]
+    wrr = make_scheduler("wrr", execs, weights=[1, 1, 1])
+    for e in execs:
+        e.busy_until = 1e9
+    before = wrr.rounds_completed
+    for i in range(5):
+        assert wrr.assign(i, t=0.1 * i) is None
+    assert wrr.rounds_completed == before + 5
+    assert wrr.slot_idx == 0                   # drops never advance slots
+
+
+def test_proportional_refreshes_weights_under_total_backlog():
+    """Sustained overload — every arrival dropped — must still trigger
+    the EWMA weight refresh within ``update_period`` scan-crossed
+    rounds: runtime adaptation under backlog is the condition the
+    Proportional policy exists for."""
+    execs = [ReplicaExecutor(0, 1.0), ReplicaExecutor(1, 4.0)]
+    sched = make_scheduler("proportional", execs, update_period=3)
+    for e in execs:
+        e.busy_until = 1e9
+        e.ewma_service = 0.5
+    for i in range(sched.update_period + 1):
+        assert sched.assign(i, t=0.05 * i) is None
+    assert sched.rounds_completed >= sched.update_period
+    assert sched._last_refresh >= sched.update_period
+
+
+# ---- 2. falsy-zero service times ---------------------------------------
+def test_zero_cost_oracle_service_time_is_honored():
+    """A pinned ``service_time=0.0`` must pin the virtual clock to
+    zero — the old ``service_time or wall`` fell back to the measured
+    wall, so 'free' frames consumed fake capacity and were dropped."""
+    def oracle(images, rids=None):
+        B = len(images)
+        return (np.zeros((B, 4, 4), np.float32),
+                np.zeros((B, 4), np.float32), np.zeros((B, 4), np.int32),
+                np.zeros((B, 4), bool))
+    frames = [FrameRequest(i, np.zeros((4, 4, 3), np.float32), i / 50.0)
+              for i in range(20)]
+    eng = DetectionEngine(detect_fn=oracle, n_replicas=1,
+                          service_time=0.0, drop_when_busy=True)
+    out = eng.serve(frames)
+    assert out["dropped"] == []                # zero cost -> zero backlog
+    assert all(r.service_s == 0.0 for r in out["responses"])
+    assert all(r.t_done == r.t_start for r in out["responses"])
+    assert all(r._last_wall == 0.0 for r in eng.replicas)
+
+
+def test_mu_effective_and_refresh_honor_zero_ewma():
+    """An EWMA of exactly 0.0 is a measurement, not missing data: both
+    ``mu_effective`` and the Proportional reweighting must use it
+    instead of falling back to configured walls."""
+    fast, slow = ReplicaExecutor(0, 1.0), ReplicaExecutor(1, 4.0)
+    fast.ewma_service = slow.ewma_service = 0.0
+    assert fast.mu_effective == slow.mu_effective == 1e6
+    sched = make_scheduler("proportional", [fast, slow])
+    sched._refresh_weights()
+    assert sched.weights == [1, 1]             # equal zero-cost rates
+
+
+# ---- 3. per-serve state reset ------------------------------------------
+def test_back_to_back_serves_produce_identical_reports():
+    """Virtual-clock state must not leak across ``serve()`` calls: a
+    second identical call used to inherit the first call's
+    ``busy_until`` horizon (mass drops at t=0) and cumulative
+    ``per_replica`` counts."""
+    frames, frame_of, videos, dets = make_nvr_streams(3, 10, rate=4.0)
+    oracle = proxy_detect_fn_streams(videos, dets, frame_of)
+    kw = dict(detect_fn=oracle, n_replicas=2, service_time=0.3,
+              track_and_interpolate=True)
+    eng = DetectionEngine(**kw)
+    first, second = eng.serve(frames), eng.serve(frames)
+    assert_reports_identical(first, second)
+    sharded = ShardedDetectionEngine(n_shards=2, **kw)
+    first, second = sharded.serve(frames), sharded.serve(frames)
+    assert_reports_identical(first, second)
+    assert first["shard_of_stream"] == second["shard_of_stream"]
+
+
+def test_per_replica_counts_are_per_call():
+    frames, frame_of, videos, dets = make_nvr_streams(2, 6, rate=10.0)
+    oracle = proxy_detect_fn_streams(videos, dets, frame_of)
+    eng = DetectionEngine(detect_fn=oracle, n_replicas=2,
+                          service_time=0.05)
+    a, b = eng.serve(frames), eng.serve(frames)
+    assert sum(a["per_replica"].values()) == len(frames)
+    assert a["per_replica"] == b["per_replica"]  # not cumulative
+
+
+# ---- backlog snapshot API (tentpole's observation surface) -------------
+def test_backlog_snapshot_reads_residual_virtual_work():
+    frames, frame_of, videos, dets = make_nvr_streams(2, 8, rate=20.0)
+    oracle = proxy_detect_fn_streams(videos, dets, frame_of)
+    eng = DetectionEngine(detect_fn=oracle, n_replicas=2,
+                          service_time=0.5)
+    before = eng.serve(frames, reset=True)
+    t_end = max(f.t_arrival for f in frames)
+    snap = eng.backlog_snapshot(t_end)
+    # blocking mode queued everything: committed work extends past t_end
+    assert snap["backlog_s"] > 0.0
+    assert snap["horizon_s"] == max(snap["busy_until"]) - t_end
+    assert snap["backlog_s"] == pytest.approx(sum(
+        max(0.0, b - t_end) for b in snap["busy_until"]))
+    eng.reset()
+    assert eng.backlog_snapshot(0.0)["backlog_s"] == 0.0
+    assert before["coverage"] == 1.0
