@@ -55,7 +55,7 @@ def main():
     }
     names = (args.only.split(",") if args.only else
              list(benches) + ["kernels", "nms", "tracking", "nvr",
-                              "sharded", "roofline"])
+                              "sharded", "faults", "roofline"])
 
     print("name,us_per_call,derived")
     for name in names:
@@ -135,6 +135,36 @@ def main():
               f"migrations={len(w['migrations'])} "
               f"step_ms {w['tracker_step_ms_static']:.2f}->"
               f"{w['tracker_step_ms_stealing']:.2f}")
+
+    if "faults" in names:
+        # fault-injected serving: a whole shard dies mid-epoch and the
+        # watchdog restarts + evacuates it; derived = frames the kill
+        # lost (recovered_coverage 1.0 asserted inside).  Second row:
+        # replica lending on the single-hot-stream overload; derived =
+        # drops the loan recovered vs the unsupervised run.
+        from benchmarks.faults_bench import (scenario_lending,
+                                             scenario_shard_kill)
+        t0 = time.perf_counter()
+        # 24 frames @4fps = a 6 s horizon: the kill epoch ([2,4)) needs
+        # at least one later epoch for the boundary recovery to land in
+        sk, ok_sk = scenario_shard_kill(4, 24)
+        assert ok_sk and sk["recovered_coverage"] == 1.0
+        print(f"faults_shard_kill,{(time.perf_counter() - t0) * 1e6:.0f},"
+              f"{sk['frames_lost_shard']}")
+        print(f"# shard kill @t={sk['kill_t']}: restart "
+              f"epoch={sk['restarts'][0]['epoch']} "
+              f"evacuations={len(sk['evacuations'])} "
+              f"cov={sk['coverage']:.3f} recovered="
+              f"{sk['recovered_coverage']:.1f}")
+        t0 = time.perf_counter()
+        ld, ok_ld = scenario_lending()
+        assert ok_ld
+        print(f"faults_lending,{(time.perf_counter() - t0) * 1e6:.0f},"
+              f"{ld['drops_unsupervised'] - ld['drops_with_lending']}")
+        print(f"# lending: drops {ld['drops_unsupervised']}->"
+              f"{ld['drops_with_lending']} loans={len(ld['loans'])} "
+              f"cov {ld['coverage_unsupervised']:.3f}->"
+              f"{ld['coverage_with_lending']:.3f}")
 
     if "roofline" in names:
         try:

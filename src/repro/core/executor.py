@@ -88,6 +88,7 @@ class DetectorExecutor:
         self.busy_until = 0.0
         self.n_processed = 0
         self.ewma_service = None   # fed back to the proportional scheduler
+        self.faults = None         # optional serving.faults.ReplicaFaultView
 
     @property
     def mu_effective(self) -> float:
@@ -95,16 +96,25 @@ class DetectorExecutor:
         t += self.model.frame_bytes / INTERFACE_GOODPUT[self.interface]
         return 1.0 / t
 
-    def service_time(self, frame=None) -> float:
+    def service_time(self, frame=None, t=None) -> float:
+        """Virtual service seconds for one frame; ``t`` (the virtual
+        dispatch time, passed by the scheduler) only matters when a
+        fault view is attached — injected slowdowns multiply the base
+        time and a dead replica reports infinity, which the scheduler's
+        timeout rule detects."""
         if self.infer_fn is not None and frame is not None:
             t0 = time.perf_counter()
             self.infer_fn(frame)
             return time.perf_counter() - t0
-        t = 1.0 / self.mu_effective
+        s = 1.0 / self.mu_effective
         if self.jitter > 0:
             sigma = self.jitter
-            t *= float(self._rng.lognormal(-0.5 * sigma ** 2, sigma))
-        return t
+            s *= float(self._rng.lognormal(-0.5 * sigma ** 2, sigma))
+        if self.faults is not None and t is not None:
+            if not self.faults.alive(t):
+                return float("inf")
+            s *= self.faults.factor(t)
+        return s
 
     def record(self, t_service: float):
         self.n_processed += 1

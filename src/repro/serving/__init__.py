@@ -18,15 +18,28 @@ ONE ``jax.jit`` program spanning the mesh's replica axis
 (``make_spmd_detect``), and per-shard reports merge into one global
 report (``merge_shard_reports``) that ``core.quality.evaluate_streams``
 consumes unchanged.
+
+Fault injection + supervision (``repro.serving.faults`` /
+``repro.serving.supervisor``): a ``FaultSchedule`` of virtual-time
+replica/shard failure events drives deterministic chaos through the
+same serving paths (schedulers detect failures by service timeout and
+fail over; the sharded epoch loop loses a killed shard's frames and a
+``Watchdog`` restarts it, evacuates its cameras, and lends replicas
+along the pressure gradient).  An empty schedule is inert: the
+fault-free report is bit-identical to an engine built without one.
 """
 from .engine import (DetectionEngine, DetectionResponse, FrameRequest,
                      ReplicaExecutor, Request, Response, ServingEngine)
+from .faults import (FaultEvent, FaultSchedule, ReplicaFaultView,
+                     ShardFaultCursor)
 from .nvr import make_nvr_streams, make_skewed_streams
 from .sharded import (ShardedDetectionEngine, make_spmd_detect,
                       merge_epoch_shard_reports, merge_shard_reports)
+from .supervisor import Watchdog
 
-__all__ = ["DetectionEngine", "DetectionResponse", "FrameRequest",
+__all__ = ["DetectionEngine", "DetectionResponse", "FaultEvent",
+           "FaultSchedule", "FrameRequest", "ReplicaFaultView",
            "Request", "Response", "ReplicaExecutor", "ServingEngine",
-           "ShardedDetectionEngine", "make_nvr_streams",
-           "make_skewed_streams", "make_spmd_detect",
+           "ShardFaultCursor", "ShardedDetectionEngine", "Watchdog",
+           "make_nvr_streams", "make_skewed_streams", "make_spmd_detect",
            "merge_epoch_shard_reports", "merge_shard_reports"]

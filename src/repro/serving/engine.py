@@ -128,6 +128,7 @@ class ReplicaExecutor:
         self.n_processed = 0
         self.ewma_service = None
         self._last_wall = 0.1
+        self.faults = None            # optional faults.ReplicaFaultView
 
     @property
     def mu_effective(self) -> float:
@@ -138,8 +139,19 @@ class ReplicaExecutor:
              else self.ewma_service)
         return 1.0 / max(t, 1e-6)
 
-    def service_time(self, frame=None) -> float:
-        return self._last_wall * self.speed
+    def service_time(self, frame=None, t=None) -> float:
+        """Virtual service seconds for one frame.  ``t`` is the virtual
+        dispatch time the scheduler evaluates the work at; it only
+        matters when a fault view is attached — an injected slowdown
+        multiplies the base estimate and a dead replica reports
+        infinity, which the scheduler's timeout rule turns into a
+        suspect + retry (``core.scheduler``)."""
+        s = self._last_wall * self.speed
+        if self.faults is not None and t is not None:
+            if not self.faults.alive(t):
+                return float("inf")
+            s *= self.faults.factor(t)
+        return s
 
     def record(self, t_service: float):
         self.n_processed += 1
@@ -188,6 +200,9 @@ class ServingEngine:
                  scheduler: str = "fcfs", cache_len: int = 128,
                  replica_speeds: Optional[Sequence[float]] = None,
                  drop_when_busy: bool = False, seed: int = 0):
+        if n_replicas < 1:
+            raise ValueError(f"n_replicas must be >= 1, got {n_replicas}: "
+                             "an empty replica pool can never serve")
         self.cfg = cfg
         self.params = params if params is not None else init_model(
             cfg, jax.random.PRNGKey(seed))
@@ -263,7 +278,13 @@ class ServingEngine:
                     dropped.append(req.rid)
                     continue
             else:
+                # raises NoHealthyExecutorError when nothing can ever
+                # take the request (fail fast, never spin); returns None
+                # only when a fault kills the bounded retry chain
                 a = self.scheduler.blocking_assign(req.rid, req.t_arrival)
+                if a is None:
+                    dropped.append(req.rid)
+                    continue
             responses.append(Response(req.rid, gen, a.executor_idx,
                                       a.t_start, a.t_done, wall))
         responses.sort(key=lambda r: r.rid)       # sequence synchronizer
@@ -309,6 +330,15 @@ class DetectionEngine:
       coverage/FPS/drop accounting in the report (``per_stream``,
       ``streams``).  B=1 results are bit-identical to the
       single-stream engine.
+    * ``faults=`` takes a ``serving.faults.FaultSchedule`` of
+      virtual-time replica slowdowns/deaths/revivals (``fault_shard``
+      picks which shard's events apply — 0 standalone).  The scheduler
+      detects failures by timeout (``timeout_k`` x expected service),
+      retries the in-flight frame up to ``max_retries`` times on a
+      healthy replica, and the report's ``retries`` / ``failovers`` /
+      ``frames_lost`` keys count the outcomes per replica.  An empty
+      schedule (or ``None``) leaves every path bit-identical to the
+      pre-fault engine.
     """
 
     def __init__(self, cfg=None, params=None, n_replicas: int = 4,
@@ -320,7 +350,12 @@ class DetectionEngine:
                  drop_when_busy: bool = False,
                  track_and_interpolate: bool = False,
                  tracker_cfg=None, detect_fn=None,
-                 service_time: Optional[float] = None):
+                 service_time: Optional[float] = None,
+                 faults=None, fault_shard: int = 0,
+                 timeout_k: float = 4.0, max_retries: int = 1):
+        if n_replicas < 1:
+            raise ValueError(f"n_replicas must be >= 1, got {n_replicas}: "
+                             "an empty replica pool can never serve")
         self.micro_batch = micro_batch
         self.max_micro_batch = micro_batch or max_micro_batch
         self.drop_when_busy = drop_when_busy or track_and_interpolate
@@ -345,8 +380,17 @@ class DetectionEngine:
             self.cfg = cfg
         speeds = list(replica_speeds or [1.0] * n_replicas)
         self.replicas = [ReplicaExecutor(i, s) for i, s in enumerate(speeds)]
+        # fault injection: an EMPTY schedule normalizes to None, so the
+        # no-fault path attaches no views and stays bit-identical to the
+        # pre-fault engine (the no_fault_bit_identical regression bar)
+        self.faults = faults if faults else None
+        if self.faults is not None:
+            for r in self.replicas:
+                r.faults = self.faults.view(fault_shard, r.idx)
         self.scheduler = make_scheduler(scheduler, self.replicas,
-                                        host_overhead=1e-4)
+                                        host_overhead=1e-4,
+                                        timeout_k=timeout_k,
+                                        max_retries=max_retries)
         self._warm = False
 
     def _detect_batch(self, images: np.ndarray, rids=None):
@@ -472,13 +516,18 @@ class DetectionEngine:
         per-stream ``seq`` order}), ``emit_t`` ({stream_id: monotonic
         release clocks, same length as the stream's responses}),
         ``per_stream`` ({stream_id: frames / dropped / interpolated /
-        coverage / throughput_fps}), and ``tracker_launches`` /
+        coverage / throughput_fps}), ``tracker_launches`` /
         ``tracker_ticks`` (lockstep-tracker accounting; 0 unless
-        ``track_and_interpolate``)."""
+        ``track_and_interpolate``), and ``retries`` / ``failovers`` /
+        ``frames_lost`` (this call's failure-detection counts, sparse
+        per replica — all empty on the fault-free path)."""
         if not self._warm:
             self.warmup()
         if reset:
             self.reset()
+        # failure counters are cumulative on the scheduler (they survive
+        # warm-started epoch calls); the report wants THIS call's deltas
+        fc0 = self.scheduler.fault_counts()
         frames = sorted(frames, key=lambda f: f.t_arrival)
         # per-stream arrival index (seq): the k-th frame of each camera,
         # offset by the warm-start floor when one epoch's sub-trace
@@ -504,7 +553,11 @@ class DetectionEngine:
             if self.drop_when_busy:
                 # the drop decision happens at arrival time, before this
                 # batch's wall time exists — it uses the service estimate
-                # from the previous batch (a real system can do no better)
+                # from the previous batch (a real system can do no better).
+                # A fault-lost frame (assign detects a failure and the
+                # bounded retry dies too) lands in the same dropped list:
+                # under track_and_interpolate the tracker coasts it, so
+                # an outage degrades to interpolation, never to a gap.
                 for f in chunk:
                     a = self.scheduler.assign(f.rid, f.t_arrival)
                     if a is None:
@@ -530,11 +583,24 @@ class DetectionEngine:
                 r._last_wall = per_frame
             if not self.drop_when_busy:
                 # blocking mode assigns after the measurement, so this
-                # batch's own wall time drives its virtual-clock slots
-                assigns = [self.scheduler.blocking_assign(f.rid,
-                                                          f.t_arrival)
-                           for f in kept]
+                # batch's own wall time drives its virtual-clock slots.
+                # During a total outage (no healthy replica) blocking
+                # would hang forever — those frames take the
+                # drop-accounted path instead of raising, so a transient
+                # all-dead window degrades coverage rather than the call
+                assigns = []
+                for f in kept:
+                    if not self.scheduler.any_healthy():
+                        self.scheduler.probe_health(f.t_arrival)
+                    if self.scheduler.any_healthy():
+                        assigns.append(self.scheduler.blocking_assign(
+                            f.rid, f.t_arrival))
+                    else:
+                        assigns.append(None)
             for j, (f, a) in enumerate(zip(kept, assigns)):
+                if a is None:            # fault-lost (retry exhausted or
+                    dropped.append(f)    # no healthy replica): accounted
+                    continue             # as a drop, never a silent gap
                 responses.append(DetectionResponse(
                     f.rid, boxes[j], scores[j], classes[j], valid[j],
                     a.executor_idx, a.t_start, a.t_done, per_frame,
@@ -568,6 +634,14 @@ class DetectionEngine:
                 "coverage": len(rs) / max(n, 1),
                 "throughput_fps": len(rs) / max(mk, 1e-9),
             }
+        # this call's failure-detection deltas, sparse per replica
+        # (all-empty dicts on the fault-free path)
+        fc1 = self.scheduler.fault_counts()
+        fault_counts = {
+            key: {i: fc1[key].get(i, 0) - fc0[key].get(i, 0)
+                  for i in set(fc1[key]) | set(fc0[key])
+                  if fc1[key].get(i, 0) - fc0[key].get(i, 0)}
+            for key in ("retries", "failovers", "frames_lost")}
         return {
             "responses": responses,
             "dropped": [f.rid for f in dropped],
@@ -581,6 +655,9 @@ class DetectionEngine:
             "per_stream": per_stream,
             "tracker_launches": self._tracker_launches,
             "tracker_ticks": self._tracker_ticks,
+            "retries": fault_counts["retries"],
+            "failovers": fault_counts["failovers"],
+            "frames_lost": fault_counts["frames_lost"],
         }
 
     def _interpolate(self, frames, responses, seq_of,

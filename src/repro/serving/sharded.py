@@ -45,6 +45,7 @@ from ..sharding.context import mesh_context
 from ..sharding.serving_rules import (constrain_detections, constrain_frames,
                                       rebalance_streams, shard_streams)
 from .engine import DetectionEngine, FrameRequest
+from .faults import ShardFaultCursor
 
 
 def make_spmd_detect(cfg, params, mesh, *, score_thr: float = 0.4,
@@ -129,6 +130,27 @@ def _renumber_and_collect(frames: Sequence[FrameRequest],
     return responses, dropped, makespan, per_replica, streams, emit_t
 
 
+def _merged_fault_counts(reports: Sequence[Dict],
+                         report_shard: Sequence[int],
+                         pool_sizes: Sequence[int]) -> Dict[str, Dict]:
+    """Sum the per-replica failure counters (``retries`` / ``failovers``
+    / ``frames_lost``) across shard reports, renumbering replica ids by
+    the owning shard's pool offset exactly like ``per_replica``.  The
+    keys stay sparse (all-empty on the fault-free path), mirroring the
+    single-engine report."""
+    offsets = [0] * len(pool_sizes)
+    for h in range(1, len(pool_sizes)):
+        offsets[h] = offsets[h - 1] + pool_sizes[h - 1]
+    out: Dict[str, Dict] = {"retries": {}, "failovers": {},
+                            "frames_lost": {}}
+    for rep, h in zip(reports, report_shard):
+        for key, agg in out.items():
+            for idx, c in rep.get(key, {}).items():
+                g = offsets[h] + idx
+                agg[g] = agg.get(g, 0) + c
+    return out
+
+
 def merge_shard_reports(frames: Sequence[FrameRequest],
                         reports: Sequence[Dict],
                         pool_sizes: Sequence[int]) -> Dict:
@@ -186,6 +208,7 @@ def merge_shard_reports(frames: Sequence[FrameRequest],
                                 for rep in reports),
         "tracker_ticks": max((rep["tracker_ticks"] for rep in reports),
                              default=0),
+        **_merged_fault_counts(reports, range(len(reports)), pool_sizes),
         "n_shards": len(reports),
         "per_shard": [{
             "streams": sorted(rep["per_stream"]),
@@ -268,6 +291,7 @@ def merge_epoch_shard_reports(frames: Sequence[FrameRequest],
                                 for rep in reports),
         "tracker_ticks": max((sh["tracker_ticks"] for sh in per_shard),
                              default=0),
+        **_merged_fault_counts(reports, report_shard, pool_sizes),
         "n_shards": n_shards,
         "per_shard": per_shard,
     }
@@ -333,6 +357,7 @@ class ShardedDetectionEngine:
                  score_thr: float = 0.4, iou_thr: float = 0.5,
                  max_out: int = 32, rebalance: bool = False,
                  epoch_s: float = 4.0, max_moves_per_epoch: int = 1,
+                 faults=None, supervisor=None,
                  **engine_kwargs):
         if n_shards < 1:
             raise ValueError(f"n_shards must be >= 1, got {n_shards}")
@@ -341,6 +366,20 @@ class ShardedDetectionEngine:
         self.rebalance = rebalance
         self.epoch_s = epoch_s
         self.max_moves_per_epoch = max_moves_per_epoch
+        # fault injection + supervision: an empty schedule normalizes to
+        # None so the fault-free paths stay bit-identical
+        self.faults = faults if faults else None
+        self.supervisor = supervisor
+        if self.faults is not None and self.faults.has_shard_events and (
+                not rebalance or n_shards < 2):
+            raise ValueError(
+                "shard-level fault events are folded into the epoch "
+                "loop: they require rebalance=True and n_shards >= 2 "
+                "(replica-level events work on any configuration)")
+        if supervisor is not None and (not rebalance or n_shards < 2):
+            raise ValueError(
+                "the watchdog supervises epoch boundaries: supervisor= "
+                "requires rebalance=True and n_shards >= 2")
         if mesh is not None and detect_fn is not None:
             raise ValueError(
                 "mesh= (SPMD detect) and detect_fn= (host-side oracle) "
@@ -375,8 +414,9 @@ class ShardedDetectionEngine:
                                    score_thr=score_thr, iou_thr=iou_thr,
                                    max_out=max_out)
             self.cfg = cfg
-        self.engines = [DetectionEngine(**shard_detect_kw, **engine_kwargs)
-                        for _ in range(n_shards)]
+        self.engines = [DetectionEngine(**shard_detect_kw, **engine_kwargs,
+                                        faults=self.faults, fault_shard=h)
+                        for h in range(n_shards)]
         if mesh is None and detect_fn is None:
             # one jitted program for all shards (identical closures
             # would otherwise re-trace/compile per shard)
@@ -430,13 +470,26 @@ class ShardedDetectionEngine:
         work stealing between them (see the class docstring); the
         report gains ``migrations`` (one ``{"epoch", "stream", "src",
         "dst"}`` record per executed move) and ``n_epochs``, and
-        ``shard_of_stream`` reflects the FINAL partition."""
+        ``shard_of_stream`` reflects the FINAL partition.
+
+        With ``faults=`` (or ``supervisor=``) active, the report also
+        gains ``faults`` (``{"n_events", "frames_lost_shard",
+        "restarts", "loans"}`` — the injected schedule's size and the
+        recovery actions taken) and ``recovered_coverage`` (the minimum
+        per-stream coverage over frames arriving after the last fault /
+        recovery action took effect — 1.0 means every stream fully
+        recovered)."""
         if self._shared_detect is not None:
             self.warmup()
         shard_of = shard_streams((f.stream_id for f in frames),
                                  self.n_shards)
         if not self.rebalance or self.n_shards == 1 or not frames:
-            return self._serve_static(frames, shard_of)
+            out = self._serve_static(frames, shard_of)
+            if self.faults is not None:
+                self._attach_fault_keys(
+                    out, frames, lost=[], restarts=[], loans=[],
+                    t_rec=self.faults.last_event_t if frames else None)
+            return out
         return self._serve_rebalancing(frames, shard_of)
 
     def _serve_static(self, frames: Sequence[FrameRequest],
@@ -473,7 +526,20 @@ class ShardedDetectionEngine:
         their new shard with their ``seq`` / emit-clock floors carried
         over (warm-start), and every shard's lockstep tracker re-seeds
         from the new epoch's first detections — the explicit epoch-
-        boundary handoff, never a silent mid-epoch reset."""
+        boundary handoff, never a silent mid-epoch reset.
+
+        Shard-level faults fold in here (``ShardFaultCursor``): a kill
+        loses the frames arriving while the shard is down (in-flight
+        work at the kill instant completes — the host's output buffer
+        survives), the shard stops heartbeating, and lost frames still
+        advance the per-stream ``seq`` floors so later epochs map to
+        the correct arrival indices.  Recovery (schedule revive or
+        watchdog restart) is boundary-quantized, which keeps each
+        stream's lost frames a contiguous suffix of its epoch arrivals
+        — the property the floor arithmetic relies on.  The watchdog
+        (``supervisor=``) acts at each boundary: restart + evacuation
+        for dead shards, then replica lending along the residual
+        pressure gradient when stream migration did not act."""
         frames = sorted(frames, key=lambda f: f.t_arrival)
         t0 = frames[0].t_arrival
         windows: List[List[FrameRequest]] = []
@@ -495,14 +561,38 @@ class ShardedDetectionEngine:
         reports: List[Dict] = []
         report_shard: List[int] = []
         migrations: List[Dict] = []
+        # fault/supervision state — all inert on the fault-free path
+        sup = self.supervisor
+        cursor = (ShardFaultCursor(self.faults, self.n_shards)
+                  if self.faults is not None
+                  and self.faults.has_shard_events else None)
+        heartbeat = {h: -1 for h in range(self.n_shards)}
+        lost: List[FrameRequest] = []
+        if sup is not None:
+            sup.begin(self.engines)
         for i, (raw_e, ef) in enumerate(epochs):
             subs: List[List[FrameRequest]] = [
                 [] for _ in range(self.n_shards)]
             for f in ef:
                 subs[shard_of[f.stream_id]].append(f)
             t_end = ef[-1].t_arrival
+            w_start = t0 + raw_e * self.epoch_s
+            w_end = t0 + (raw_e + 1) * self.epoch_s
             observations = []
+            down: List[int] = []
             for h, (eng, sub) in enumerate(zip(self.engines, subs)):
+                lost_h: List[FrameRequest] = []
+                if cursor is not None:
+                    cut = cursor.begin_epoch(h, w_start, w_end)
+                    if cut is not None:
+                        lost_h = [f for f in sub if f.t_arrival >= cut]
+                        sub = [f for f in sub if f.t_arrival < cut]
+                    if cursor.is_down(h):
+                        down.append(h)      # no heartbeat this epoch
+                    else:
+                        heartbeat[h] = raw_e
+                else:
+                    heartbeat[h] = raw_e
                 warm = {sid: seq0.get(sid, 0)
                         for sid, hh in shard_of.items() if hh == h}
                 rep = eng.serve(sub, reset=(i == 0), stream_seq0=warm,
@@ -511,28 +601,142 @@ class ShardedDetectionEngine:
                                               if sid in emit0})
                 reports.append(rep)
                 report_shard.append(h)
+                obs_frames = {sid: v["frames"]
+                              for sid, v in rep["per_stream"].items()}
+                for f in lost_h:   # the policy sees true arrival rates
+                    obs_frames[f.stream_id] = \
+                        obs_frames.get(f.stream_id, 0) + 1
                 observations.append({
-                    "drops": len(rep["dropped"]),
+                    # shard-lost frames are drops for the pressure
+                    # signal: a dead shard reads maximally pressured
+                    "drops": len(rep["dropped"]) + len(lost_h),
                     "backlog_s":
                         eng.backlog_snapshot(t_end)["backlog_s"],
-                    "frames": {sid: v["frames"]
-                               for sid, v in rep["per_stream"].items()},
+                    "frames": obs_frames,
                 })
                 for sid, v in rep["per_stream"].items():
                     seq0[sid] = seq0.get(sid, 0) + v["frames"]
+                for f in lost_h:
+                    # lost frames still advance the seq floor: later
+                    # epochs' frames must map to their true per-stream
+                    # arrival indices or quality accounting corrupts
+                    seq0[f.stream_id] = seq0.get(f.stream_id, 0) + 1
                 for sid, em in rep["emit_t"].items():
                     if em:
                         emit0[sid] = max(emit0.get(sid, 0.0), em[-1])
+                lost += lost_h
             if i < len(epochs) - 1:
+                evac: List[int] = []
+                if sup is not None and cursor is not None:
+                    dead = sup.detect_dead(heartbeat, raw_e,
+                                           [bool(s) for s in subs])
+                    for h in dead:
+                        sup.handle_dead(self.engines, h, cursor, raw_e,
+                                        w_end)
+                    # every currently-down shard is excluded from the
+                    # stealing phase (and drained of streams), detected
+                    # or not — a dead host must never RECEIVE streams
+                    evac = sorted(set(down))
                 shard_of, moves = rebalance_streams(
                     shard_of, observations,
-                    max_moves=self.max_moves_per_epoch)
+                    max_moves=self.max_moves_per_epoch,
+                    evacuate=tuple(evac))
                 migrations += [{"epoch": raw_e, "stream": sid,
                                 "src": src, "dst": dst}
                                for sid, src, dst in moves]
+                if sup is not None:
+                    stole = any(src not in set(evac)
+                                for _, src, _ in moves)
+                    sup.rebalance_loans(self.engines, observations,
+                                        moved=stole, down=down,
+                                        epoch=raw_e,
+                                        epoch_s=self.epoch_s)
+        if sup is not None:
+            sup.finish(self.engines, epochs[-1][0])
+            pool_sizes = sup.pool_sizes(self.engines)
         out = merge_epoch_shard_reports(frames, reports, report_shard,
                                         pool_sizes)
         out["shard_of_stream"] = shard_of
         out["migrations"] = migrations
         out["n_epochs"] = len(windows)
+        if lost:
+            # fold the shard-lost frames into the drop accounting: they
+            # never reached an engine, so no report counted them
+            pos = {f.rid: k for k, f in enumerate(frames)}
+            out["dropped"] = sorted(out["dropped"]
+                                    + [f.rid for f in lost],
+                                    key=pos.__getitem__)
+            for f in lost:
+                agg = out["per_stream"].setdefault(
+                    f.stream_id, {"frames": 0, "dropped": 0,
+                                  "interpolated": 0, "coverage": 0.0,
+                                  "throughput_fps": 0.0})
+                agg["frames"] += 1
+                agg["dropped"] += 1
+            for sid in sorted({f.stream_id for f in lost}):
+                rs = out["streams"].setdefault(sid, [])
+                out["emit_t"].setdefault(sid, [])
+                agg = out["per_stream"][sid]
+                agg["coverage"] = len(rs) / max(agg["frames"], 1)
+            out["n_streams"] = len(out["per_stream"])
+        if self.faults is not None or sup is not None:
+            restarts = list(sup.restart_log) if sup is not None else []
+            loans = list(sup.loan_log) if sup is not None else []
+            t_cands = []
+            if self.faults is not None:
+                t_cands.append(self.faults.last_event_t)
+            t_cands += [r["t"] for r in restarts]
+            for ln in loans:
+                t_cands.append(t0 + (ln["epoch"] + 1) * self.epoch_s)
+                if ln["returned_epoch"] is not None:
+                    t_cands.append(
+                        t0 + (ln["returned_epoch"] + 1) * self.epoch_s)
+            t_rec = None
+            if t_cands:
+                # recovery acts at epoch boundaries: quantize the last
+                # fault/action up to the next boundary
+                k = int(np.ceil(max(max(t_cands) - t0, 0.0)
+                                / self.epoch_s - 1e-12))
+                t_rec = t0 + k * self.epoch_s
+            self._attach_fault_keys(out, frames, lost, restarts, loans,
+                                    t_rec)
         return out
+
+    # -------------------------------------------------------- fault report
+    def _attach_fault_keys(self, out: Dict, frames, lost, restarts,
+                           loans, t_rec):
+        """Attach the fault-scenario keys: ``faults`` (what happened and
+        what the supervision did about it) and ``recovered_coverage``
+        (did every stream come back after the dust settled)."""
+        out["faults"] = {
+            "n_events": len(self.faults) if self.faults is not None else 0,
+            "frames_lost_shard": len(lost),
+            "restarts": restarts,
+            "loans": loans,
+        }
+        out["recovered_coverage"] = self._recovered_coverage(
+            out, frames, t_rec)
+
+    @staticmethod
+    def _recovered_coverage(out: Dict, frames, t_rec) -> float:
+        """Minimum per-stream coverage over frames arriving at or after
+        ``t_rec`` (the first epoch boundary after the last fault or
+        recovery action).  1.0 = every stream fully served once the
+        system settled; 0.0 = some stream never came back.  ``None``
+        (no fault ever fired) reads 1.0 by definition."""
+        if t_rec is None:
+            return 1.0
+        total: Dict[int, int] = {}
+        by_rid: Dict[int, FrameRequest] = {}
+        for f in frames:
+            by_rid[f.rid] = f
+            if f.t_arrival >= t_rec:
+                total[f.stream_id] = total.get(f.stream_id, 0) + 1
+        if not total:
+            return 1.0            # the trace ended before recovery did
+        got: Dict[int, int] = {}
+        for r in out["responses"]:
+            f = by_rid.get(r.rid)
+            if f is not None and f.t_arrival >= t_rec:
+                got[f.stream_id] = got.get(f.stream_id, 0) + 1
+        return min(got.get(sid, 0) / n for sid, n in sorted(total.items()))

@@ -106,7 +106,7 @@ def streams_of_shard(shard_of: Dict[int, int], shard: int) -> List[int]:
 
 
 def rebalance_streams(shard_of: Dict[int, int], loads: Sequence[Dict],
-                      max_moves: int = 1
+                      max_moves: int = 1, evacuate: Sequence[int] = ()
                       ) -> Tuple[Dict[int, int], List[Tuple[int, int, int]]]:
     """Cross-shard work stealing: migrate whole camera streams from the
     most pressured shard to the least pressured one, based on one served
@@ -139,14 +139,26 @@ def rebalance_streams(shard_of: Dict[int, int], loads: Sequence[Dict],
        a stream's frames never split across shards inside an epoch, so
        per-stream ordering survives migration untouched).
 
+    Forced evacuation (``evacuate=``): the watchdog's re-homing path.
+    Shards listed in ``evacuate`` are treated as DEAD — every stream
+    they own is re-homed before the stealing phase runs, heaviest
+    observed first, each to the live shard with the least observed
+    load at that point (ties by lowest shard id).  Unlike stealing,
+    evacuation is unconditional: rule 3's strict-improvement gate does
+    not apply (there is no "keeping it where it is" when the shard is
+    down), evacuation moves do not count against ``max_moves``, and
+    evacuated shards are excluded from the stealing phase entirely
+    (their epoch observations describe a dead host — neither a
+    credible donor nor a restart-fresh receiver this boundary).
+
     Deterministic: every choice is totally ordered (ties fall back to
     shard/stream ids), and only the observation values matter — not
     dict insertion order — so replicas that saw the same epoch report
     agree on the migration without communicating.
 
     Returns ``(new_shard_of, moves)`` with ``moves`` a list of
-    ``(stream_id, src_shard, dst_shard)``; the input mapping is not
-    mutated.
+    ``(stream_id, src_shard, dst_shard)`` (evacuation moves first);
+    the input mapping is not mutated.
 
     >>> of = {0: 0, 2: 0, 4: 0, 1: 1, 3: 1, 5: 1}
     >>> loads = [{"drops": 9, "backlog_s": 3.0,
@@ -171,14 +183,31 @@ def rebalance_streams(shard_of: Dict[int, int], loads: Sequence[Dict],
             stream_frames[sid] = stream_frames.get(sid, 0) + int(c)
     pressure = [(int(load["drops"]), float(load["backlog_s"]))
                 for load in loads]
+    dead = set(int(h) for h in evacuate)
+    live = [h for h in range(n) if h not in dead]
+    if dead and not live:
+        raise ValueError("cannot evacuate every shard: no live shard "
+                         "left to re-home the streams onto")
+    # -- phase 0: forced evacuation of dead shards (watchdog re-homing)
+    for h in sorted(dead):
+        doomed = sorted((sid for sid, hh in shard_of.items() if hh == h),
+                        key=lambda sid: (-stream_frames.get(sid, 0), sid))
+        for sid in doomed:
+            shard_load = {r: sum(stream_frames.get(s, 0)
+                                 for s, x in shard_of.items() if x == r)
+                          for r in live}
+            recv = min(live, key=lambda r: (shard_load[r], r))
+            shard_of[sid] = recv
+            moves.append((sid, h, recv))
+    # -- stealing phase (live shards only)
     for _ in range(max_moves):
         shard_load = [sum(stream_frames.get(sid, 0)
                           for sid, h in shard_of.items() if h == hh)
                       for hh in range(n)]
-        donor = max(range(n), key=lambda h: (pressure[h], shard_load[h],
-                                             -h))
-        recv = min(range(n), key=lambda h: (pressure[h], shard_load[h],
-                                            h))
+        donor = max(live, key=lambda h: (pressure[h], shard_load[h],
+                                         -h))
+        recv = min(live, key=lambda h: (pressure[h], shard_load[h],
+                                        h))
         if donor == recv or pressure[donor] <= pressure[recv]:
             break                        # no pressure gradient -> stable
         cands = sorted((sid for sid, h in shard_of.items()
