@@ -55,7 +55,7 @@ def main():
     }
     names = (args.only.split(",") if args.only else
              list(benches) + ["kernels", "nms", "tracking", "nvr",
-                              "sharded", "faults", "roofline"])
+                              "sharded", "faults", "obs", "roofline"])
 
     print("name,us_per_call,derived")
     for name in names:
@@ -165,6 +165,29 @@ def main():
               f"{ld['drops_with_lending']} loans={len(ld['loans'])} "
               f"cov {ld['coverage_unsupervised']:.3f}->"
               f"{ld['coverage_with_lending']:.3f}")
+
+    if "obs" in names:
+        # frame-lifecycle tracing: derived = traced/untraced wall ratio
+        # on the 8-cam sharded serve (budget 1.05), with the recorded
+        # chaos trace audited against the serving invariants
+        from benchmarks.obs_bench import (scenario_audit_chaos,
+                                          scenario_overhead)
+        t0 = time.perf_counter()
+        ovh, ok_ovh = scenario_overhead(24, blocks=4)
+        assert ok_ovh, f"tracing overhead {ovh['overhead_ratio']} > 1.05"
+        print(f"obs_overhead,{(time.perf_counter() - t0) * 1e6:.0f},"
+              f"{ovh['overhead_ratio']:.4f}")
+        print(f"# obs: {ovh['events_recorded']} events/serve "
+              f"untraced={ovh['untraced_ms']:.1f}ms "
+              f"traced={ovh['traced_ms']:.1f}ms")
+        t0 = time.perf_counter()
+        ch, ok_ch, _rec = scenario_audit_chaos(4, 16, seeds=(0, 1))
+        assert ok_ch, "chaos trace failed the invariant audit"
+        print(f"obs_audit_chaos,{(time.perf_counter() - t0) * 1e6:.0f},"
+              f"{len(ch['per_seed'])}")
+        print("# obs audit: " + " ".join(
+            f"seed{p['seed']}={p['events']}ev/"
+            f"{'ok' if p['ok'] else 'FAIL'}" for p in ch["per_seed"]))
 
     if "roofline" in names:
         try:

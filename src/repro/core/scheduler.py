@@ -47,6 +47,7 @@ from typing import List, Optional, Tuple
 import numpy as np
 
 from .executor import DetectorExecutor
+from ..obs.trace import NULL_RECORDER
 
 
 @dataclass
@@ -82,6 +83,10 @@ class _Base:
         self.retries: dict = {}       # executor idx -> suspected dispatches
         self.failovers: dict = {}     # executor idx -> frames rescued
         self.frames_lost: dict = {}   # executor idx -> frames not rescued
+        # observability: the owning engine swaps in its TraceRecorder
+        # (or shard view); the no-op default adds one attribute read per
+        # dispatch and keeps the virtual timeline untouched
+        self.recorder = NULL_RECORDER
 
     @property
     def n(self):
@@ -109,6 +114,8 @@ class _Base:
                 if view is not None and view.alive(t) \
                         and view.factor(t) < self.timeout_k:
                     self.healthy[j] = True
+                    if self.recorder.enabled:
+                        self.recorder.record("health_restore", t, replica=j)
                     self._pool_changed()
 
     def sync_pool(self):
@@ -153,11 +160,19 @@ class _Base:
                 ex.busy_until = t_detect    # the slot is held until the
                 self.healthy[ex_idx] = False  # timeout fires
                 self.retries[ex_idx] = self.retries.get(ex_idx, 0) + 1
+                if self.recorder.enabled:
+                    self.recorder.record("retry", t_detect, rid=frame_idx,
+                                         replica=ex_idx, attempt=_attempt)
+                    self.recorder.record("health_mark", t_detect,
+                                         replica=ex_idx)
                 self._pool_changed()
                 live = [i for i in range(self.n) if self.healthy[i]]
                 if _attempt >= self.max_retries or not live:
                     self.frames_lost[ex_idx] = \
                         self.frames_lost.get(ex_idx, 0) + 1
+                    if self.recorder.enabled:
+                        self.recorder.record("lost", t_detect,
+                                             rid=frame_idx, replica=ex_idx)
                     return None
                 j = min(live, key=lambda i: self.executors[i].busy_until)
                 a = self._dispatch(j, frame_idx, t_detect,
@@ -167,10 +182,20 @@ class _Base:
                     # failing executor, so only rescues count here
                     self.failovers[ex_idx] = \
                         self.failovers.get(ex_idx, 0) + 1
+                    if self.recorder.enabled:
+                        self.recorder.record("failover", t_detect,
+                                             rid=frame_idx, replica=ex_idx,
+                                             to=a.executor_idx)
                 return a
         t_done = t_start + service
         ex.busy_until = t_done
         ex.record(service)
+        if self.recorder.enabled:
+            self.recorder.record("dispatch", t_start, rid=frame_idx,
+                                 replica=ex_idx)
+            self.recorder.record("complete", t_done, rid=frame_idx,
+                                 replica=ex_idx, t0=t_start,
+                                 service=service)
         return Assignment(frame_idx, ex_idx, t_start, t_done)
 
     def assign(self, frame_idx: int, t: float) -> Optional[Assignment]:

@@ -29,6 +29,10 @@ def serve_frames(args):
     from repro.launch.mesh import make_serving_mesh
     from repro.serving import ShardedDetectionEngine, make_nvr_streams
 
+    recorder = None
+    if args.trace:
+        from repro.obs import TraceRecorder
+        recorder = TraceRecorder()
     frames, frame_of, videos, dets = make_nvr_streams(
         args.cameras, args.frames, args.rate)
     mesh = None
@@ -40,7 +44,8 @@ def serve_frames(args):
                   "meshless fallback (set XLA_FLAGS=--xla_force_host_"
                   "platform_device_count to get a real mesh)")
     kw = dict(n_shards=args.shards, n_replicas=args.n_replicas,
-              scheduler=args.scheduler, track_and_interpolate=True)
+              scheduler=args.scheduler, track_and_interpolate=True,
+              recorder=recorder)
     if mesh is not None:
         eng = ShardedDetectionEngine(mesh=mesh, **kw)
         # the SPMD path runs the real mini-SSD: give it real-sized
@@ -68,6 +73,26 @@ def serve_frames(args):
     if q is not None:
         print(f"tracked mAP mean={q['map_mean']*100:.1f}% "
               f"min={q['map_min']*100:.1f}%")
+    print(f"p95_latency={out['p95_latency']*1e3:.1f} ms "
+          f"p99_latency={out['p99_latency']*1e3:.1f} ms")
+    if recorder is not None:
+        _write_trace(args.trace, recorder)
+
+
+def _write_trace(path: str, recorder):
+    """Export the recorded trace (Perfetto-viewable Chrome JSON) and
+    audit it before writing — a trace that breaks the serving
+    invariants should fail loudly at the source, not at inspection."""
+    from repro.obs import audit_recorder, write_chrome_trace
+    res = audit_recorder(recorder)
+    write_chrome_trace(path, recorder)
+    print(f"trace: {len(recorder.events)} events -> {path} "
+          f"(open at https://ui.perfetto.dev)  audit="
+          f"{'ok' if res.ok else 'FAIL'}")
+    if not res.ok:
+        for v in res.violations[:5]:
+            print(f"  audit violation: {v}")
+        raise SystemExit(1)
 
 
 def main():
@@ -98,6 +123,11 @@ def main():
     ap.add_argument("--heterogeneous", action="store_true",
                     help="replica 0 is 5x faster (the paper's fast-CPU+"
                          "NCS2 mix)")
+    ap.add_argument("--trace", default=None, metavar="OUT.json",
+                    help="record the frame-lifecycle trace and export "
+                         "it as Chrome-trace-event JSON (open at "
+                         "https://ui.perfetto.dev); the trace is "
+                         "audited before writing")
     args = ap.parse_args()
 
     if args.rate is None:
@@ -118,9 +148,13 @@ def main():
     speeds = None
     if args.heterogeneous:
         speeds = [0.2] + [1.0] * (args.n_replicas - 1)
+    recorder = None
+    if args.trace:
+        from repro.obs import TraceRecorder
+        recorder = TraceRecorder()
     engine = ServingEngine(cfg, n_replicas=args.n_replicas,
                            scheduler=args.scheduler, cache_len=256,
-                           replica_speeds=speeds)
+                           replica_speeds=speeds, recorder=recorder)
     rng = np.random.default_rng(0)
     reqs = [Request(i, rng.integers(0, cfg.vocab_size - 1, args.prompt_len)
                     .astype(np.int32), args.new_tokens, i / args.rate)
@@ -130,9 +164,13 @@ def main():
     print(f"throughput={out['throughput_rps']:.2f} req/s  "
           f"p50_latency={out['p50_latency']*1e3:.1f} ms  "
           f"dropped={len(out['dropped'])}")
+    print(f"p95_latency={out['p95_latency']*1e3:.1f} ms  "
+          f"p99_latency={out['p99_latency']*1e3:.1f} ms")
     print(f"per-replica counts: {out['per_replica']}")
     first = out["responses"][0]
     print(f"first response tokens: {first.tokens.tolist()}")
+    if recorder is not None:
+        _write_trace(args.trace, recorder)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,191 @@
+"""Trace-replay invariant checking.
+
+A serving trace is a deterministic artifact (virtual clock), so the
+invariants the stack is *supposed* to uphold can be re-checked from the
+event log alone — no engine state, no re-run.  ``audit_events`` replays
+a recorded event list and verifies:
+
+1. **Frame conservation** — every ``arrive`` reaches exactly one
+   terminal state: ``emit`` (detected), ``interp_emit``
+   (tracker-coasted re-emission of a drop), ``drop`` with no
+   re-emission, or ``shard_lost`` (a down shard swallowed it).  No
+   frame vanishes; no frame is emitted twice.
+2. **Per-stream emit monotonicity** — within each stream the emitted
+   sequence numbers strictly increase and emit times never decrease
+   (the reorder buffer's contract, including across epoch migrations
+   where the emit clock is carried as a floor).
+3. **No dispatch to a dead replica** — between a ``health_mark`` and
+   the matching ``health_restore`` for a ``(shard, replica)`` lane,
+   the scheduler must not ``dispatch`` to that lane.  A
+   ``shard_restart`` closes every open mark on its shard (the watchdog
+   resets the whole scheduler health mask), and a ``loan_return``
+   closes the borrower's retired guest lane.  Checked in *code order*
+   (the event sequence number ``i``), the order decisions were
+   actually made in — virtual timestamps of a retry's detection and
+   the rescuing dispatch can legitimately interleave.
+4. **Loans are LIFO-returned** — ``loan_return`` events per borrower
+   must pop the most recent outstanding ``loan`` (the tail-replica
+   lending discipline), and every loan must be returned by trace end.
+
+``audit_events`` returns an ``AuditResult`` whose ``violations`` list
+is empty on a clean trace; each violation is a dict with a ``rule``
+key naming the broken invariant.  ``tools/check_trace.py`` is the CLI
+over saved trace files.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Tuple
+
+
+class AuditResult:
+    """Outcome of a trace audit: per-rule violation dicts + tallies."""
+
+    def __init__(self, violations: List[dict], stats: dict):
+        self.violations = violations
+        self.stats = stats
+
+    @property
+    def ok(self) -> bool:
+        return not self.violations
+
+    def __repr__(self):
+        return (f"AuditResult(ok={self.ok}, "
+                f"violations={len(self.violations)}, stats={self.stats})")
+
+
+def _lane(ev: dict) -> Tuple[int, int]:
+    return (ev.get("shard", 0), ev["replica"])
+
+
+def audit_events(events: List[dict],
+                 max_violations: int = 50) -> AuditResult:
+    """Replay ``events`` (raw recorder order) and check the four
+    invariants in the module docstring.  Events may be passed in any
+    order; they are re-sorted by code order ``i`` first."""
+    evs = sorted(events, key=lambda e: e["i"])
+    violations: List[dict] = []
+
+    def flag(rule: str, ev: Optional[dict] = None, **detail):
+        if len(violations) < max_violations:
+            v = {"rule": rule}
+            if ev is not None:
+                v["event"] = ev
+            v.update(detail)
+            violations.append(v)
+
+    # -- per-frame terminal-state machine ------------------------------
+    # rid -> one of None (arrived, pending), "emit", "interp_emit",
+    # "drop", "shard_lost"
+    state: Dict[int, Optional[str]] = {}
+    # -- per-stream emit clock -----------------------------------------
+    last_emit: Dict[int, Tuple[int, float]] = {}   # stream -> (seq, t)
+    # -- replica health (code-order intervals) -------------------------
+    dead: Dict[Tuple[int, int], dict] = {}          # lane -> mark event
+    # -- loan stacks ---------------------------------------------------
+    loans: Dict[int, List[dict]] = {}               # borrower -> stack
+
+    n = {"arrive": 0, "emit": 0, "interp_emit": 0, "drop": 0,
+         "shard_lost": 0, "dispatch": 0, "loan": 0}
+
+    for ev in evs:
+        kind = ev["kind"]
+        if kind == "arrive":
+            n["arrive"] += 1
+            rid = ev["rid"]
+            if rid in state:
+                flag("frame_conservation", ev, why="duplicate arrive")
+            state.setdefault(rid, None)
+        elif kind in ("emit", "interp_emit"):
+            n[kind] += 1
+            rid = ev["rid"]
+            if rid not in state:
+                flag("frame_conservation", ev, why="emit without arrive")
+            elif state[rid] == "drop" and kind == "interp_emit":
+                pass   # a dropped frame MAY be coasted back by the tracker
+            elif state[rid] is not None:
+                flag("frame_conservation", ev,
+                     why=f"{kind} after terminal {state[rid]}")
+            state[rid] = kind
+            s, seq, t = ev["stream"], ev["seq"], ev["t"]
+            if s in last_emit:
+                pseq, pt = last_emit[s]
+                if seq <= pseq:
+                    flag("emit_monotonicity", ev, prev_seq=pseq,
+                         why="sequence not increasing")
+                if t < pt:
+                    flag("emit_monotonicity", ev, prev_t=pt,
+                         why="emit time decreased")
+            last_emit[s] = (seq, t)
+        elif kind == "drop":
+            n["drop"] += 1
+            rid = ev["rid"]
+            if state.get(rid) is not None:
+                flag("frame_conservation", ev,
+                     why=f"drop after terminal {state[rid]}")
+            state[rid] = "drop"
+        elif kind == "shard_lost":
+            n["shard_lost"] += 1
+            rid = ev["rid"]
+            if state.get(rid) is not None:
+                flag("frame_conservation", ev,
+                     why=f"lost after terminal {state[rid]}")
+            state[rid] = "shard_lost"
+        elif kind == "dispatch":
+            n["dispatch"] += 1
+            lane = _lane(ev)
+            if lane in dead:
+                flag("dead_replica_dispatch", ev,
+                     marked_at=dead[lane]["t"])
+        elif kind == "health_mark":
+            dead[_lane(ev)] = ev
+        elif kind == "health_restore":
+            dead.pop(_lane(ev), None)
+        elif kind == "shard_restart":
+            # the watchdog restart resets the shard's whole scheduler
+            # health mask: every open mark on that shard closes
+            for lane in [ln for ln in dead if ln[0] == ev.get("shard")]:
+                dead.pop(lane)
+        elif kind == "loan":
+            n["loan"] += 1
+            loans.setdefault(ev["borrower"], []).append(ev)
+        elif kind == "loan_return":
+            stack = loans.get(ev["borrower"], [])
+            if not stack:
+                flag("loan_lifo", ev, why="return without loan")
+            elif stack[-1]["lender"] != ev["lender"]:
+                flag("loan_lifo", ev, expected=stack[-1]["lender"],
+                     why="not the most recent loan (LIFO broken)")
+                stack.pop()
+            else:
+                stack.pop()
+            # the returned guest lane is retired; close any open death
+            # mark on it so a FUTURE loan creating a fresh guest at the
+            # same index isn't falsely flagged
+            dead.pop((ev["borrower"], ev["guest"]), None)
+
+    for rid, st in state.items():
+        if st is None:
+            flag("frame_conservation", None, rid=rid,
+                 why="arrived but never emitted/dropped/lost")
+    for borrower, stack in loans.items():
+        for ev in stack:
+            flag("loan_lifo", ev, why="loan never returned")
+
+    emitted = n["emit"] + n["interp_emit"]
+    # drops that were later coasted back count as interp_emit terminals,
+    # so conservation is over terminal states, not raw counters
+    terminal = sum(1 for st in state.values() if st is not None)
+    if terminal != n["arrive"] and not violations:
+        flag("frame_conservation", None, arrived=n["arrive"],
+             terminal=terminal, why="terminal-state count mismatch")
+
+    stats = dict(n)
+    stats["emitted"] = emitted
+    stats["dropped_final"] = sum(1 for st in state.values()
+                                 if st == "drop")
+    return AuditResult(violations, stats)
+
+
+def audit_recorder(recorder) -> AuditResult:
+    """Convenience: audit a live ``TraceRecorder``."""
+    return audit_events(recorder.events)

@@ -43,6 +43,8 @@ from ..core.scheduler import make_scheduler
 from ..core.synchronizer import SequenceSynchronizer
 from ..models import init_model
 from ..models.config import ModelConfig
+from ..obs.metrics import detection_latency_keys
+from ..obs.trace import NULL_RECORDER
 from ..runtime.steps import make_decode_step, make_prefill_step
 
 
@@ -199,7 +201,8 @@ class ServingEngine:
     def __init__(self, cfg: ModelConfig, params=None, n_replicas: int = 4,
                  scheduler: str = "fcfs", cache_len: int = 128,
                  replica_speeds: Optional[Sequence[float]] = None,
-                 drop_when_busy: bool = False, seed: int = 0):
+                 drop_when_busy: bool = False, seed: int = 0,
+                 recorder=None):
         if n_replicas < 1:
             raise ValueError(f"n_replicas must be >= 1, got {n_replicas}: "
                              "an empty replica pool can never serve")
@@ -213,6 +216,11 @@ class ServingEngine:
         self.replicas = [ReplicaExecutor(i, s) for i, s in enumerate(speeds)]
         self.scheduler = make_scheduler(scheduler, self.replicas,
                                         host_overhead=1e-4)
+        # observability (repro.obs): None -> the shared no-op recorder,
+        # so the untraced engine stays bit-identical to the pre-tracing
+        # one; the scheduler shares the same recorder for dispatch events
+        self.recorder = recorder if recorder is not None else NULL_RECORDER
+        self.scheduler.recorder = self.recorder
         self.drop_when_busy = drop_when_busy
         self._warm = False
 
@@ -258,17 +266,29 @@ class ServingEngine:
         Each call is independent: per-serve virtual-clock state is reset
         on entry, and ``per_replica`` counts THIS call's placements (not
         a lifetime cumulative), so two identical back-to-back calls
-        return identical reports."""
+        return identical reports.
+
+        Latency keys (same names as ``DetectionEngine.serve``, present
+        in the empty-trace early return too): ``p50_latency`` (exact
+        median of ``t_done - t_start``), ``p95_latency`` /
+        ``p99_latency`` (quantiles of the log-bucketed
+        ``latency_hist`` — see ``repro.obs.metrics``)."""
         if not requests:                  # empty report, like DetectionEngine
+            empty = detection_latency_keys([])
             return {"responses": [], "dropped": [], "throughput_rps": 0.0,
-                    "p50_latency": 0.0,
+                    "p50_latency": 0.0, "p95_latency": 0.0,
+                    "p99_latency": 0.0, "latency_hist": empty["latency_hist"],
                     "per_replica": {r.idx: 0 for r in self.replicas}}
         if not self._warm:
             self.warmup(max(len(r.tokens) for r in requests))
         self.reset()
+        rec = self.recorder
         responses: List[Response] = []
         dropped: List[int] = []
         for req in sorted(requests, key=lambda r: r.t_arrival):
+            if rec.enabled:
+                rec.record("arrive", req.t_arrival, rid=req.rid,
+                           stream=0, seq=req.rid)
             gen, wall = self._generate(req)       # real compute, measured
             for r in self.replicas:               # this request would cost
                 r._last_wall = wall               # wall x speed on replica r
@@ -276,6 +296,9 @@ class ServingEngine:
                 a = self.scheduler.assign(req.rid, req.t_arrival)
                 if a is None:
                     dropped.append(req.rid)
+                    if rec.enabled:
+                        rec.record("drop", req.t_arrival, rid=req.rid,
+                                   stream=0, seq=req.rid)
                     continue
             else:
                 # raises NoHealthyExecutorError when nothing can ever
@@ -284,18 +307,28 @@ class ServingEngine:
                 a = self.scheduler.blocking_assign(req.rid, req.t_arrival)
                 if a is None:
                     dropped.append(req.rid)
+                    if rec.enabled:
+                        rec.record("drop", req.t_arrival, rid=req.rid,
+                                   stream=0, seq=req.rid)
                     continue
             responses.append(Response(req.rid, gen, a.executor_idx,
                                       a.t_start, a.t_done, wall))
         responses.sort(key=lambda r: r.rid)       # sequence synchronizer
+        if rec.enabled:
+            clk = 0.0                   # rid-order release clock (one lane)
+            for r in responses:
+                clk = max(clk, r.t_done)
+                rec.record("emit", clk, rid=r.rid, stream=0, seq=r.rid)
         makespan = max((r.t_done for r in responses), default=0.0)
+        lk = detection_latency_keys(responses)
         return {
             "responses": responses,
             "dropped": dropped,
             "throughput_rps": len(responses) / max(makespan, 1e-9),
-            "p50_latency": float(np.median(
-                [r.t_done - r.t_start for r in responses])) if responses
-            else 0.0,
+            "p50_latency": lk["p50_latency"],
+            "p95_latency": lk["p95_latency"],
+            "p99_latency": lk["p99_latency"],
+            "latency_hist": lk["latency_hist"],
             "per_replica": _per_replica_counts(self.replicas, responses),
         }
 
@@ -352,7 +385,8 @@ class DetectionEngine:
                  tracker_cfg=None, detect_fn=None,
                  service_time: Optional[float] = None,
                  faults=None, fault_shard: int = 0,
-                 timeout_k: float = 4.0, max_retries: int = 1):
+                 timeout_k: float = 4.0, max_retries: int = 1,
+                 recorder=None):
         if n_replicas < 1:
             raise ValueError(f"n_replicas must be >= 1, got {n_replicas}: "
                              "an empty replica pool can never serve")
@@ -391,6 +425,12 @@ class DetectionEngine:
                                         host_overhead=1e-4,
                                         timeout_k=timeout_k,
                                         max_retries=max_retries)
+        # observability (repro.obs): None -> the shared no-op recorder —
+        # the disabled path skips every event and stays bit-identical.
+        # The sharded engine passes each shard a recorder.shard_view(h)
+        # so this engine's events carry their failure domain.
+        self.recorder = recorder if recorder is not None else NULL_RECORDER
+        self.scheduler.recorder = self.recorder
         self._warm = False
 
     def _detect_batch(self, images: np.ndarray, rids=None):
@@ -520,7 +560,21 @@ class DetectionEngine:
         ``tracker_ticks`` (lockstep-tracker accounting; 0 unless
         ``track_and_interpolate``), and ``retries`` / ``failovers`` /
         ``frames_lost`` (this call's failure-detection counts, sparse
-        per replica — all empty on the fault-free path)."""
+        per replica — all empty on the fault-free path).
+
+        Latency keys (``repro.obs.metrics``): ``p50_latency`` (exact
+        median of detection ``t_done - t_start``), ``p95_latency`` /
+        ``p99_latency`` (quantiles of the log-bucketed
+        ``latency_hist`` — mergeable: shard merges sum buckets and
+        recompute, never average), ``interp_latency`` (re-emission
+        delay of tracker-interpolated frames, kept OUT of the
+        detection histogram), and ``latency_by_stream`` /
+        ``latency_by_replica`` histogram rollups.  With a
+        ``recorder=`` attached, the engine additionally records the
+        full frame lifecycle (arrive/enqueue/dispatch/complete/drop/
+        emit events — see ``repro.obs.trace``) and samples queue depth
+        and scheduler backlog at each micro-batch dispatch; the
+        default no-op recorder keeps this path bit-identical."""
         if not self._warm:
             self.warmup()
         if reset:
@@ -542,13 +596,37 @@ class DetectionEngine:
             seq_next[f.stream_id] = seq_of[f.rid] + 1
             n_frames_stream[f.stream_id] = \
                 n_frames_stream.get(f.stream_id, 0) + 1
+        rec = self.recorder
+        if rec.enabled:
+            rec_arrive = rec.record
+            for f in frames:
+                rec_arrive("arrive", f.t_arrival, rid=f.rid,
+                           stream=f.stream_id, seq=seq_of[f.rid])
         responses: List[DetectionResponse] = []
         dropped: List[FrameRequest] = []
         pad_to = self.micro_batch or None     # fixed mode: one jit shape
         i = 0
+        batch_no = 0
         while i < len(frames):
             chunk = frames[i:i + self._chunk_size(frames, i)]
             i += len(chunk)
+            if rec.enabled:
+                if batch_no % 4 == 0:
+                    # queue depth + residual backlog sampled at the
+                    # moment a micro-batch forms (the dispatch decision
+                    # point), decimated 4:1 — the series is a load
+                    # signal, not a ledger, and the backlog scan is the
+                    # costliest per-batch probe on the traced path
+                    t_q = max(chunk[0].t_arrival,
+                              min(r.busy_until for r in self.replicas))
+                    rec.sample("queue_depth", t_q, len(chunk))
+                    rec.sample("backlog_s", t_q,
+                               self.scheduler.backlog(t_q))
+                rec_enq = rec.record
+                for f in chunk:
+                    rec_enq("enqueue", f.t_arrival, rid=f.rid,
+                            stream=f.stream_id, batch=batch_no)
+            batch_no += 1
             kept, assigns = [], []
             if self.drop_when_busy:
                 # the drop decision happens at arrival time, before this
@@ -562,6 +640,10 @@ class DetectionEngine:
                     a = self.scheduler.assign(f.rid, f.t_arrival)
                     if a is None:
                         dropped.append(f)
+                        if rec.enabled:
+                            rec.record("drop", f.t_arrival, rid=f.rid,
+                                       stream=f.stream_id,
+                                       seq=seq_of[f.rid])
                         continue
                     kept.append(f)
                     assigns.append(a)
@@ -600,7 +682,10 @@ class DetectionEngine:
             for j, (f, a) in enumerate(zip(kept, assigns)):
                 if a is None:            # fault-lost (retry exhausted or
                     dropped.append(f)    # no healthy replica): accounted
-                    continue             # as a drop, never a silent gap
+                    if rec.enabled:      # as a drop, never a silent gap
+                        rec.record("drop", f.t_arrival, rid=f.rid,
+                                   stream=f.stream_id, seq=seq_of[f.rid])
+                    continue
                 responses.append(DetectionResponse(
                     f.rid, boxes[j], scores[j], classes[j], valid[j],
                     a.executor_idx, a.t_start, a.t_done, per_frame,
@@ -619,6 +704,19 @@ class DetectionEngine:
         streams, emit_t = {}, {}
         for sid, (rs, emits) in ordered.items():
             streams[sid], emit_t[sid] = rs, emits
+        if rec.enabled:
+            # trace emits carry the warm-start emit floor forward (the
+            # sharded epoch loop slices ONE logical trace into calls, and
+            # a migrated stream's emits must stay monotone ACROSS calls —
+            # exactly the global clock the shard-report merge rebuilds).
+            # The report's emit_t stays the per-call clock, unchanged.
+            rec_emit = rec.record
+            for sid in sorted(streams):
+                clk = (stream_emit0 or {}).get(sid, 0.0)
+                for r, e in zip(streams[sid], emit_t[sid]):
+                    clk = max(clk, e)
+                    rec_emit("interp_emit" if r.interpolated else "emit",
+                             clk, rid=r.rid, stream=sid, seq=r.seq)
         drop_stream: Dict[int, int] = {}
         for f in dropped:
             drop_stream[f.stream_id] = drop_stream.get(f.stream_id, 0) + 1
@@ -658,6 +756,12 @@ class DetectionEngine:
             "retries": fault_counts["retries"],
             "failovers": fault_counts["failovers"],
             "frames_lost": fault_counts["frames_lost"],
+            # latency distribution block (repro.obs.metrics): exact p50
+            # plus histogram-derived p95/p99 and mergeable rollups;
+            # interpolated frames land in interp_latency, never in the
+            # detection histogram
+            **detection_latency_keys(
+                responses, {f.rid: f.t_arrival for f in frames}),
         }
 
     def _interpolate(self, frames, responses, seq_of,

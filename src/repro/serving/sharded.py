@@ -34,13 +34,15 @@ the base report.
 from __future__ import annotations
 
 from dataclasses import replace
-from typing import Dict, List, Sequence
+from typing import Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from ..core.synchronizer import SequenceSynchronizer
+from ..obs.metrics import merge_hist_dicts, quantile_of_dict
+from ..obs.trace import NULL_RECORDER
 from ..sharding.context import mesh_context
 from ..sharding.serving_rules import (constrain_detections, constrain_frames,
                                       rebalance_streams, shard_streams)
@@ -151,6 +153,58 @@ def _merged_fault_counts(reports: Sequence[Dict],
     return out
 
 
+def _merged_latency_keys(responses, reports: Sequence[Dict],
+                         report_shard: Sequence[int],
+                         pool_sizes: Sequence[int]) -> Dict:
+    """Rebuild the latency block of a merged report (``repro.obs``
+    contract): histograms SUM bucket-wise across shard reports and the
+    quantiles are recomputed from the merged buckets — never averaged
+    (an average of per-shard p99s is not a p99).  ``p50_latency`` is
+    recomputed exactly (median over the merged detection latencies,
+    the same formula the engine uses), so a single-shard merge is
+    bit-identical to the shard's own report.  ``latency_by_replica``
+    keys renumber by the owning shard's pool offset like
+    ``per_replica``."""
+    det = merge_hist_dicts(rep.get("latency_hist") for rep in reports)
+    interp = merge_hist_dicts(rep.get("interp_latency")
+                              for rep in reports)
+    by_stream: Dict[int, List] = {}
+    by_replica: Dict[int, List] = {}
+    offsets = [0] * len(pool_sizes)
+    for h in range(1, len(pool_sizes)):
+        offsets[h] = offsets[h - 1] + pool_sizes[h - 1]
+    for rep, h in zip(reports, report_shard):
+        for sid, d in rep.get("latency_by_stream", {}).items():
+            by_stream.setdefault(sid, []).append(d)
+        for idx, d in rep.get("latency_by_replica", {}).items():
+            by_replica.setdefault(offsets[h] + idx, []).append(d)
+    lat = [r.t_done - r.t_start for r in responses if not r.interpolated]
+    return {
+        "p50_latency": float(np.median(lat)) if lat else 0.0,
+        "p95_latency": quantile_of_dict(det, 0.95),
+        "p99_latency": quantile_of_dict(det, 0.99),
+        "latency_hist": det,
+        "interp_latency": interp,
+        "latency_by_stream": {sid: merge_hist_dicts(ds)
+                              for sid, ds in sorted(by_stream.items())},
+        "latency_by_replica": {g: merge_hist_dicts(ds)
+                               for g, ds in sorted(by_replica.items())},
+    }
+
+
+def _epoch_rollup(reports: Sequence[Dict]) -> Dict:
+    """One epoch's latency/volume rollup for the ``per_epoch`` key."""
+    det = merge_hist_dicts(rep.get("latency_hist") for rep in reports)
+    return {
+        "responses": sum(len(rep["responses"]) for rep in reports),
+        "dropped": sum(len(rep["dropped"]) for rep in reports),
+        "interpolated": sum(rep["interpolated"] for rep in reports),
+        "latency_hist": det,
+        "p95_latency": quantile_of_dict(det, 0.95),
+        "p99_latency": quantile_of_dict(det, 0.99),
+    }
+
+
 def merge_shard_reports(frames: Sequence[FrameRequest],
                         reports: Sequence[Dict],
                         pool_sizes: Sequence[int]) -> Dict:
@@ -209,6 +263,9 @@ def merge_shard_reports(frames: Sequence[FrameRequest],
         "tracker_ticks": max((rep["tracker_ticks"] for rep in reports),
                              default=0),
         **_merged_fault_counts(reports, range(len(reports)), pool_sizes),
+        **_merged_latency_keys(responses, reports, range(len(reports)),
+                               pool_sizes),
+        "per_epoch": {0: _epoch_rollup(reports)},
         "n_shards": len(reports),
         "per_shard": [{
             "streams": sorted(rep["per_stream"]),
@@ -218,6 +275,7 @@ def merge_shard_reports(frames: Sequence[FrameRequest],
             "interpolated": rep["interpolated"],
             "tracker_launches": rep["tracker_launches"],
             "tracker_ticks": rep["tracker_ticks"],
+            "latency_hist": merge_hist_dicts([rep.get("latency_hist")]),
         } for rep in reports],
     }
 
@@ -225,7 +283,9 @@ def merge_shard_reports(frames: Sequence[FrameRequest],
 def merge_epoch_shard_reports(frames: Sequence[FrameRequest],
                               reports: Sequence[Dict],
                               report_shard: Sequence[int],
-                              pool_sizes: Sequence[int]) -> Dict:
+                              pool_sizes: Sequence[int],
+                              report_epoch: Optional[Sequence[int]] = None,
+                              ) -> Dict:
     """Merge per-(epoch, shard) ``DetectionEngine.serve`` reports into
     one global engine report — the epoch-loop generalization of
     ``merge_shard_reports``.
@@ -246,14 +306,25 @@ def merge_epoch_shard_reports(frames: Sequence[FrameRequest],
     ``tracker_ticks`` is the max over shards of each shard's summed
     epoch ticks (shards tick in parallel, epochs in series).  The
     caller attaches ``shard_of_stream`` / ``migrations`` /
-    ``n_epochs``."""
+    ``n_epochs``.
+
+    Latency merging (``repro.obs.metrics``): histograms sum bucket-wise
+    across every (epoch, shard) report, quantiles are recomputed from
+    the merged buckets (never averaged), and ``p50_latency`` is the
+    exact median over the merged responses.  ``report_epoch`` (the raw
+    epoch index of each report, parallel to ``report_shard``) buckets
+    the ``per_epoch`` rollup; when omitted every report lands in epoch
+    0."""
     n_shards = len(pool_sizes)
+    epochs_of = (list(report_epoch) if report_epoch is not None
+                 else [0] * len(reports))
     responses, dropped, makespan, per_replica, streams, emit_t = \
         _renumber_and_collect(frames, reports, report_shard, pool_sizes)
     per_stream: Dict[int, Dict] = {}
     per_shard = [{"streams": set(), "frames": 0, "responses": 0,
                   "dropped": 0, "interpolated": 0, "tracker_launches": 0,
-                  "tracker_ticks": 0} for _ in range(n_shards)]
+                  "tracker_ticks": 0, "_hists": []}
+                 for _ in range(n_shards)]
     for rep, h in zip(reports, report_shard):
         for sid, v in rep["per_stream"].items():
             agg = per_stream.setdefault(
@@ -269,8 +340,10 @@ def merge_epoch_shard_reports(frames: Sequence[FrameRequest],
         per_shard[h]["interpolated"] += rep["interpolated"]
         per_shard[h]["tracker_launches"] += rep["tracker_launches"]
         per_shard[h]["tracker_ticks"] += rep["tracker_ticks"]
+        per_shard[h]["_hists"].append(rep.get("latency_hist"))
     for sh in per_shard:
         sh["streams"] = sorted(sh["streams"])
+        sh["latency_hist"] = merge_hist_dicts(sh.pop("_hists"))
     for sid, agg in per_stream.items():
         rs = streams.setdefault(sid, [])
         em = emit_t.setdefault(sid, [])
@@ -292,6 +365,12 @@ def merge_epoch_shard_reports(frames: Sequence[FrameRequest],
         "tracker_ticks": max((sh["tracker_ticks"] for sh in per_shard),
                              default=0),
         **_merged_fault_counts(reports, report_shard, pool_sizes),
+        **_merged_latency_keys(responses, reports, report_shard,
+                               pool_sizes),
+        "per_epoch": {
+            e: _epoch_rollup([rep for rep, re_ in zip(reports, epochs_of)
+                              if re_ == e])
+            for e in sorted(set(epochs_of))},
         "n_shards": n_shards,
         "per_shard": per_shard,
     }
@@ -357,7 +436,7 @@ class ShardedDetectionEngine:
                  score_thr: float = 0.4, iou_thr: float = 0.5,
                  max_out: int = 32, rebalance: bool = False,
                  epoch_s: float = 4.0, max_moves_per_epoch: int = 1,
-                 faults=None, supervisor=None,
+                 faults=None, supervisor=None, recorder=None,
                  **engine_kwargs):
         if n_shards < 1:
             raise ValueError(f"n_shards must be >= 1, got {n_shards}")
@@ -414,8 +493,16 @@ class ShardedDetectionEngine:
                                    score_thr=score_thr, iou_thr=iou_thr,
                                    max_out=max_out)
             self.cfg = cfg
+        # observability: each shard engine gets a shard_view(h) of the
+        # one recorder, so its frame/replica events carry their failure
+        # domain; the watchdog shares the recorder for loan/restart
+        # events.  None -> the no-op recorder (bit-identical default).
+        self.recorder = recorder if recorder is not None else NULL_RECORDER
+        if supervisor is not None:
+            supervisor.recorder = self.recorder
         self.engines = [DetectionEngine(**shard_detect_kw, **engine_kwargs,
-                                        faults=self.faults, fault_shard=h)
+                                        faults=self.faults, fault_shard=h,
+                                        recorder=self.recorder.shard_view(h))
                         for h in range(n_shards)]
         if mesh is None and detect_fn is None:
             # one jitted program for all shards (identical closures
@@ -478,7 +565,20 @@ class ShardedDetectionEngine:
         recovery actions taken) and ``recovered_coverage`` (the minimum
         per-stream coverage over frames arriving after the last fault /
         recovery action took effect — 1.0 means every stream fully
-        recovered)."""
+        recovered).
+
+        The merged report carries the engine's latency block
+        (``p50_latency`` / ``p95_latency`` / ``p99_latency`` /
+        ``latency_hist`` / ``interp_latency`` / ``latency_by_stream``
+        / ``latency_by_replica`` — histograms summed across shards,
+        quantiles recomputed from the merged buckets) plus
+        ``per_epoch`` ({raw epoch index: responses / dropped /
+        latency rollup}; a single ``0`` entry on the static path) and
+        a ``latency_hist`` per ``per_shard`` entry.  With a
+        ``recorder=`` attached, every shard engine traces through a
+        ``shard_view`` of it and the epoch loop adds
+        epoch/migrate/shard_down/shard_lost control events (the
+        watchdog adds loan/restart events) — see ``repro.obs``."""
         if self._shared_detect is not None:
             self.warmup()
         shard_of = shard_streams((f.stream_id for f in frames),
@@ -560,6 +660,7 @@ class ShardedDetectionEngine:
         emit0: Dict[int, float] = {}
         reports: List[Dict] = []
         report_shard: List[int] = []
+        report_epoch_idx: List[int] = []
         migrations: List[Dict] = []
         # fault/supervision state — all inert on the fault-free path
         sup = self.supervisor
@@ -570,6 +671,7 @@ class ShardedDetectionEngine:
         lost: List[FrameRequest] = []
         if sup is not None:
             sup.begin(self.engines)
+        rec = self.recorder
         for i, (raw_e, ef) in enumerate(epochs):
             subs: List[List[FrameRequest]] = [
                 [] for _ in range(self.n_shards)]
@@ -578,6 +680,8 @@ class ShardedDetectionEngine:
             t_end = ef[-1].t_arrival
             w_start = t0 + raw_e * self.epoch_s
             w_end = t0 + (raw_e + 1) * self.epoch_s
+            if rec.enabled:
+                rec.record("epoch", w_start, epoch=raw_e)
             observations = []
             down: List[int] = []
             for h, (eng, sub) in enumerate(zip(self.engines, subs)):
@@ -589,6 +693,9 @@ class ShardedDetectionEngine:
                         sub = [f for f in sub if f.t_arrival < cut]
                     if cursor.is_down(h):
                         down.append(h)      # no heartbeat this epoch
+                        if rec.enabled:
+                            rec.record("shard_down", w_start, shard=h,
+                                       epoch=raw_e)
                     else:
                         heartbeat[h] = raw_e
                 else:
@@ -601,6 +708,7 @@ class ShardedDetectionEngine:
                                               if sid in emit0})
                 reports.append(rep)
                 report_shard.append(h)
+                report_epoch_idx.append(raw_e)
                 obs_frames = {sid: v["frames"]
                               for sid, v in rep["per_stream"].items()}
                 for f in lost_h:   # the policy sees true arrival rates
@@ -620,6 +728,15 @@ class ShardedDetectionEngine:
                     # lost frames still advance the seq floor: later
                     # epochs' frames must map to their true per-stream
                     # arrival indices or quality accounting corrupts
+                    if rec.enabled:
+                        # lost frames never reach an engine, so their
+                        # arrive + terminal events record here (frame
+                        # conservation holds over the whole trace)
+                        rec.record("arrive", f.t_arrival, rid=f.rid,
+                                   stream=f.stream_id,
+                                   seq=seq0.get(f.stream_id, 0), shard=h)
+                        rec.record("shard_lost", f.t_arrival, rid=f.rid,
+                                   stream=f.stream_id, shard=h)
                     seq0[f.stream_id] = seq0.get(f.stream_id, 0) + 1
                 for sid, em in rep["emit_t"].items():
                     if em:
@@ -644,18 +761,24 @@ class ShardedDetectionEngine:
                 migrations += [{"epoch": raw_e, "stream": sid,
                                 "src": src, "dst": dst}
                                for sid, src, dst in moves]
+                if rec.enabled:
+                    for sid, src, dst in moves:
+                        rec.record("migrate", w_end, stream=sid,
+                                   src=src, dst=dst, epoch=raw_e)
                 if sup is not None:
                     stole = any(src not in set(evac)
                                 for _, src, _ in moves)
                     sup.rebalance_loans(self.engines, observations,
                                         moved=stole, down=down,
                                         epoch=raw_e,
-                                        epoch_s=self.epoch_s)
+                                        epoch_s=self.epoch_s, t=w_end)
         if sup is not None:
-            sup.finish(self.engines, epochs[-1][0])
+            sup.finish(self.engines, epochs[-1][0],
+                       t=t0 + (epochs[-1][0] + 1) * self.epoch_s)
             pool_sizes = sup.pool_sizes(self.engines)
         out = merge_epoch_shard_reports(frames, reports, report_shard,
-                                        pool_sizes)
+                                        pool_sizes,
+                                        report_epoch=report_epoch_idx)
         out["shard_of_stream"] = shard_of
         out["migrations"] = migrations
         out["n_epochs"] = len(windows)

@@ -60,6 +60,8 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence
 
+from ..obs.trace import NULL_RECORDER
+
 
 @dataclass
 class _Loan:
@@ -90,6 +92,9 @@ class Watchdog:
         self.loan_log: List[Dict] = []
         self._loans: List[_Loan] = []
         self._max_pool: List[int] = []
+        # observability: the owning ShardedDetectionEngine swaps in its
+        # TraceRecorder so restarts and loans land on the shared trace
+        self.recorder = NULL_RECORDER
 
     # ------------------------------------------------------------ lifecycle
     def begin(self, engines: Sequence):
@@ -99,11 +104,13 @@ class Watchdog:
         self._loans = []
         self._max_pool = [len(e.replicas) for e in engines]
 
-    def finish(self, engines: Sequence, epoch: int):
+    def finish(self, engines: Sequence, epoch: int,
+               t: Optional[float] = None):
         """Return every outstanding loan (LIFO) so pools end the serve
-        at their constructed sizes."""
+        at their constructed sizes.  ``t`` (optional, additive) is the
+        virtual boundary time the returns are recorded at."""
         while self._loans:
-            self._return(engines, self._loans[-1], epoch)
+            self._return(engines, self._loans[-1], epoch, t=t)
 
     def pool_sizes(self, engines: Sequence) -> List[int]:
         """Per-shard replica-id space for the report merge: the HIGH
@@ -128,6 +135,9 @@ class Watchdog:
         engines[h].reset()
         self.restart_log.append({"epoch": epoch, "shard": h, "ok": ok,
                                  "t": t_boundary})
+        if self.recorder.enabled:
+            self.recorder.record("shard_restart", t_boundary, shard=h,
+                                 epoch=epoch, ok=ok)
         return ok
 
     # ------------------------------------------------------------ lending
@@ -145,12 +155,15 @@ class Watchdog:
     def rebalance_loans(self, engines: Sequence,
                         observations: Sequence[Dict], moved: bool,
                         down: Sequence[int], epoch: int,
-                        epoch_s: float) -> List[Dict]:
+                        epoch_s: float,
+                        t: Optional[float] = None) -> List[Dict]:
         """One boundary's lending decisions: first return loans whose
         reason expired, then — only if stream migration did NOT act
         this boundary (migration is the cheaper fix: no pool churn) —
         open at most one new loan along the steepest pressure
-        gradient.  Down shards neither lend nor borrow."""
+        gradient.  Down shards neither lend nor borrow.  ``t``
+        (optional, additive) is the virtual boundary time loan events
+        are recorded at."""
         if not self.lend:
             return []
         actions: List[Dict] = []
@@ -159,7 +172,7 @@ class Watchdog:
             borrower_cool = pres[loan.borrower][0] == 0
             lender_hot = loan.lender in hot or loan.lender in down
             if borrower_cool or lender_hot or loan.borrower in down:
-                self._return(engines, loan, epoch)
+                self._return(engines, loan, epoch, t=t)
                 actions.append(loan.record)
         if moved or len(self._loans) >= self.max_loans:
             return actions
@@ -176,11 +189,11 @@ class Watchdog:
                      key=lambda h: (pres[h], -len(engines[h].replicas), h))
         if borrower == lender or pres[borrower] <= pres[lender]:
             return actions
-        actions.append(self._lend(engines, lender, borrower, epoch))
+        actions.append(self._lend(engines, lender, borrower, epoch, t=t))
         return actions
 
     def _lend(self, engines: Sequence, lender: int, borrower: int,
-              epoch: int) -> Dict:
+              epoch: int, t: Optional[float] = None) -> Dict:
         ex = engines[lender].replicas.pop()          # tail only: every
         home_idx = ex.idx                            # survivor keeps its
         ex.idx = len(engines[borrower].replicas)     # idx == position
@@ -193,11 +206,23 @@ class Watchdog:
         self.loan_log.append(record)
         self._max_pool[borrower] = max(self._max_pool[borrower],
                                        len(engines[borrower].replicas))
+        if self.recorder.enabled:
+            self.recorder.record("loan", 0.0 if t is None else t,
+                                 lender=lender, borrower=borrower,
+                                 guest=ex.idx, epoch=epoch)
         return record
 
-    def _return(self, engines: Sequence, loan: _Loan, epoch: int):
+    def _return(self, engines: Sequence, loan: _Loan, epoch: int,
+                t: Optional[float] = None):
         ex = engines[loan.borrower].replicas.pop()
         assert ex is loan.ex, "loan return must be LIFO (tail discipline)"
+        if self.recorder.enabled:
+            # guest = the lane the borrower just retired: the audit uses
+            # it to close any open health mark on that (shard, lane)
+            self.recorder.record("loan_return", 0.0 if t is None else t,
+                                 lender=loan.lender,
+                                 borrower=loan.borrower, guest=ex.idx,
+                                 epoch=epoch)
         ex.idx = loan.home_idx
         # the guest's virtual clock may run ahead of its home pool (it
         # was absorbing a hot shard's backlog); busy_until rides along —

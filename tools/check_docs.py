@@ -35,6 +35,8 @@ SKIP_FILES = {"SNIPPETS.md"}
 DOCTEST_MODULES = [
     "repro.sharding.serving_rules",
     "repro.serving.engine",
+    "repro.obs.trace",
+    "repro.obs.metrics",
 ]
 
 _LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
