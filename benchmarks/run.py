@@ -55,7 +55,8 @@ def main():
     }
     names = (args.only.split(",") if args.only else
              list(benches) + ["kernels", "nms", "tracking", "nvr",
-                              "sharded", "faults", "obs", "roofline"])
+                              "sharded", "faults", "obs", "daemon",
+                              "roofline"])
 
     print("name,us_per_call,derived")
     for name in names:
@@ -188,6 +189,33 @@ def main():
         print("# obs audit: " + " ".join(
             f"seed{p['seed']}={p['events']}ev/"
             f"{'ok' if p['ok'] else 'FAIL'}" for p in ch["per_seed"]))
+
+    if "daemon" in names:
+        # incremental serving core: derived = incremental/batch wall
+        # ratio on the 8-cam sharded serve with per-frame ingest
+        # (budget 1.05), plus the daemon drain (audit-clean, nothing
+        # pending after shutdown)
+        from benchmarks.daemon_bench import (scenario_daemon,
+                                             scenario_overhead as
+                                             daemon_overhead)
+        t0 = time.perf_counter()
+        ovh, ok_ovh = daemon_overhead(24, blocks=4)
+        assert ok_ovh, \
+            f"incremental overhead {ovh['overhead_ratio']} > 1.05"
+        print(f"daemon_overhead,{(time.perf_counter() - t0) * 1e6:.0f},"
+              f"{ovh['overhead_ratio']:.4f}")
+        print(f"# daemon: batch={ovh['batch_ms']:.1f}ms "
+              f"incremental={ovh['incremental_ms']:.1f}ms "
+              f"chunk={ovh['ingest_chunk']}")
+        t0 = time.perf_counter()
+        dm, ok_dm = scenario_daemon(16)
+        assert ok_dm, "daemon drain failed audit/conservation"
+        print(f"daemon_drain,{(time.perf_counter() - t0) * 1e6:.0f},"
+              f"{dm['events_published']}")
+        print(f"# daemon drain: ingested={dm['ingested']} "
+              f"pending={dm['pending_after_drain']} "
+              f"cov={dm['coverage']:.3f} "
+              f"audit={'ok' if dm['audit_ok'] else 'FAIL'}")
 
     if "roofline" in names:
         try:

@@ -27,19 +27,33 @@ fail over; the sharded epoch loop loses a killed shard's frames and a
 ``Watchdog`` restarts it, evacuates its cameras, and lends replicas
 along the pressure gradient).  An empty schedule is inert: the
 fault-free report is bit-identical to an engine built without one.
+
+Incremental core (``repro.serving.runtime``): both batch ``serve()``
+entry points are thin trace-replay drivers over ``ServingRuntime`` —
+an always-on core with ``ingest`` / ``advance`` / ``epoch_boundary`` /
+``drain`` that accepts frames in any chunking, serves rolling
+per-epoch reports mid-run, and drains to a report bit-identical to the
+one-shot batch path.  ``repro.serving.events`` derives a push-side
+event pipeline from the same ``obs.TraceRecorder`` log (``EventBus`` /
+``TapRecorder`` / ``JsonlSink``); ``repro.launch.daemon`` is the
+long-lived entry point driving both from a pluggable clock.
 """
 from .engine import (DetectionEngine, DetectionResponse, FrameRequest,
                      ReplicaExecutor, Request, Response, ServingEngine)
+from .events import EventBus, JsonlSink, TapRecorder, topic_of
 from .faults import (FaultEvent, FaultSchedule, ReplicaFaultView,
                      ShardFaultCursor)
 from .nvr import make_nvr_streams, make_skewed_streams
+from .runtime import ServingRuntime
 from .sharded import (ShardedDetectionEngine, make_spmd_detect,
                       merge_epoch_shard_reports, merge_shard_reports)
 from .supervisor import Watchdog
 
-__all__ = ["DetectionEngine", "DetectionResponse", "FaultEvent",
-           "FaultSchedule", "FrameRequest", "ReplicaFaultView",
-           "Request", "Response", "ReplicaExecutor", "ServingEngine",
-           "ShardFaultCursor", "ShardedDetectionEngine", "Watchdog",
+__all__ = ["DetectionEngine", "DetectionResponse", "EventBus",
+           "FaultEvent", "FaultSchedule", "FrameRequest", "JsonlSink",
+           "ReplicaFaultView", "Request", "Response", "ReplicaExecutor",
+           "ServingEngine", "ServingRuntime", "ShardFaultCursor",
+           "ShardedDetectionEngine", "TapRecorder", "Watchdog",
            "make_nvr_streams", "make_skewed_streams", "make_spmd_detect",
-           "merge_epoch_shard_reports", "merge_shard_reports"]
+           "merge_epoch_shard_reports", "merge_shard_reports",
+           "topic_of"]

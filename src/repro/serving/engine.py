@@ -1,14 +1,18 @@
-"""Mesh-runtime serving engine: the paper's multi-model parallelism as a
-first-class feature of an LLM/encoder serving stack.
+"""NVR detection serving engines: the paper's multi-model parallelism
+as parallel replica executors behind one scheduler.
 
 The paper's "n detection models on n accelerator sticks" becomes n model
 replicas (replica groups of the mesh; on this CPU host, n logical replicas
-sharing the device).  Requests stream in, the paper's schedulers (FCFS /
-RR / weighted / proportional) pick a replica, real jitted prefill+decode
-runs, measured wall times drive the same virtual timeline as the edge
-simulator, and the sequence synchronizer returns responses in arrival
-order.  One engine, two payload kinds: token requests (LLM serving) and
-video frames (detection serving).
+sharing the device).  Frames stream in, the paper's schedulers (FCFS /
+RR / weighted / proportional) pick a replica, the real jitted detect+NMS
+fast path runs in micro-batches, measured wall times drive the same
+virtual timeline as the edge simulator, and the sequence synchronizer
+returns responses in arrival order.  ``DetectionEngine`` is the primary
+(video-frame) payload path; ``ServingEngine`` carries the same replica
+machinery for token (LLM prefill+decode) payloads.  Both engines'
+``serve()`` are thin one-shot drivers over the incremental core in
+``repro.serving.runtime`` — ``ServingRuntime`` accepts the same trace
+frame-by-frame for always-on serving, bit-identical to the batch call.
 
 Multi-camera (NVR) contract
 ---------------------------
@@ -32,7 +36,7 @@ to the scalar-stream implementation.
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Dict, List, Optional, Sequence
 
 import jax
@@ -40,7 +44,6 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core.scheduler import make_scheduler
-from ..core.synchronizer import SequenceSynchronizer
 from ..models import init_model
 from ..models.config import ModelConfig
 from ..obs.metrics import detection_latency_keys
@@ -253,10 +256,11 @@ class ServingEngine:
         """Clear per-serve virtual-clock state (replica ``busy_until`` /
         processed counts / EWMAs and the scheduler's round bookkeeping)
         so repeated ``serve()`` calls are independent: the second call
-        sees idle replicas at t=0, exactly like the first."""
-        for r in self.replicas:
-            r.reset()
-        self.scheduler.reset()
+        sees idle replicas at t=0, exactly like the first.  Delegates to
+        ``ServingRuntime.reset_engines`` — the ONE reset semantic every
+        engine shares."""
+        from .runtime import ServingRuntime
+        ServingRuntime.reset_engines(self)
 
     # ------------------------------------------------------------- serving
     def serve(self, requests: Sequence[Request]) -> Dict:
@@ -466,10 +470,11 @@ class DetectionEngine:
         processed counts / EWMAs and the scheduler's round bookkeeping.
         Warm service estimates (``_last_wall``) and compiled programs
         survive, so a reset engine starts the next ``serve`` exactly
-        like a freshly-warmed one."""
-        for r in self.replicas:
-            r.reset()
-        self.scheduler.reset()
+        like a freshly-warmed one.  Delegates to
+        ``ServingRuntime.reset_engines`` — the ONE reset semantic every
+        engine shares."""
+        from .runtime import ServingRuntime
+        ServingRuntime.reset_engines(self)
 
     def backlog_snapshot(self, t: float) -> Dict:
         """Virtual-clock load observation at time ``t``, the signal the
@@ -575,194 +580,11 @@ class DetectionEngine:
         emit events — see ``repro.obs.trace``) and samples queue depth
         and scheduler backlog at each micro-batch dispatch; the
         default no-op recorder keeps this path bit-identical."""
-        if not self._warm:
-            self.warmup()
-        if reset:
-            self.reset()
-        # failure counters are cumulative on the scheduler (they survive
-        # warm-started epoch calls); the report wants THIS call's deltas
-        fc0 = self.scheduler.fault_counts()
-        frames = sorted(frames, key=lambda f: f.t_arrival)
-        # per-stream arrival index (seq): the k-th frame of each camera,
-        # offset by the warm-start floor when one epoch's sub-trace
-        # continues another's; n_frames_stream counts THIS call's frames
-        # (warm-start streams appear even with zero frames this call)
-        n_frames_stream: Dict[int, int] = {
-            sid: 0 for sid in (stream_seq0 or {})}
-        seq_next = dict(stream_seq0 or {})
-        seq_of: Dict[int, int] = {}
-        for f in frames:
-            seq_of[f.rid] = seq_next.get(f.stream_id, 0)
-            seq_next[f.stream_id] = seq_of[f.rid] + 1
-            n_frames_stream[f.stream_id] = \
-                n_frames_stream.get(f.stream_id, 0) + 1
-        rec = self.recorder
-        if rec.enabled:
-            rec_arrive = rec.record
-            for f in frames:
-                rec_arrive("arrive", f.t_arrival, rid=f.rid,
-                           stream=f.stream_id, seq=seq_of[f.rid])
-        responses: List[DetectionResponse] = []
-        dropped: List[FrameRequest] = []
-        pad_to = self.micro_batch or None     # fixed mode: one jit shape
-        i = 0
-        batch_no = 0
-        while i < len(frames):
-            chunk = frames[i:i + self._chunk_size(frames, i)]
-            i += len(chunk)
-            if rec.enabled:
-                if batch_no % 4 == 0:
-                    # queue depth + residual backlog sampled at the
-                    # moment a micro-batch forms (the dispatch decision
-                    # point), decimated 4:1 — the series is a load
-                    # signal, not a ledger, and the backlog scan is the
-                    # costliest per-batch probe on the traced path
-                    t_q = max(chunk[0].t_arrival,
-                              min(r.busy_until for r in self.replicas))
-                    rec.sample("queue_depth", t_q, len(chunk))
-                    rec.sample("backlog_s", t_q,
-                               self.scheduler.backlog(t_q))
-                rec_enq = rec.record
-                for f in chunk:
-                    rec_enq("enqueue", f.t_arrival, rid=f.rid,
-                            stream=f.stream_id, batch=batch_no)
-            batch_no += 1
-            kept, assigns = [], []
-            if self.drop_when_busy:
-                # the drop decision happens at arrival time, before this
-                # batch's wall time exists — it uses the service estimate
-                # from the previous batch (a real system can do no better).
-                # A fault-lost frame (assign detects a failure and the
-                # bounded retry dies too) lands in the same dropped list:
-                # under track_and_interpolate the tracker coasts it, so
-                # an outage degrades to interpolation, never to a gap.
-                for f in chunk:
-                    a = self.scheduler.assign(f.rid, f.t_arrival)
-                    if a is None:
-                        dropped.append(f)
-                        if rec.enabled:
-                            rec.record("drop", f.t_arrival, rid=f.rid,
-                                       stream=f.stream_id,
-                                       seq=seq_of[f.rid])
-                        continue
-                    kept.append(f)
-                    assigns.append(a)
-            else:
-                kept = chunk
-            if not kept:
-                continue
-            images = np.stack([f.image for f in kept])
-            b = pad_to or self._bucket(len(kept))
-            if len(kept) < b:                     # pad: static jit shapes
-                pad = np.zeros((b - len(kept),) + images.shape[1:],
-                               images.dtype)
-                images = np.concatenate([images, pad], 0)
-            (boxes, scores, classes, valid), wall = self._detect_batch(
-                images, rids=[f.rid for f in kept] + [-1] * (b - len(kept)))
-            per_frame = (wall / len(kept) if self.service_time is None
-                         else self.service_time)
-            for r in self.replicas:
-                r._last_wall = per_frame
-            if not self.drop_when_busy:
-                # blocking mode assigns after the measurement, so this
-                # batch's own wall time drives its virtual-clock slots.
-                # During a total outage (no healthy replica) blocking
-                # would hang forever — those frames take the
-                # drop-accounted path instead of raising, so a transient
-                # all-dead window degrades coverage rather than the call
-                assigns = []
-                for f in kept:
-                    if not self.scheduler.any_healthy():
-                        self.scheduler.probe_health(f.t_arrival)
-                    if self.scheduler.any_healthy():
-                        assigns.append(self.scheduler.blocking_assign(
-                            f.rid, f.t_arrival))
-                    else:
-                        assigns.append(None)
-            for j, (f, a) in enumerate(zip(kept, assigns)):
-                if a is None:            # fault-lost (retry exhausted or
-                    dropped.append(f)    # no healthy replica): accounted
-                    if rec.enabled:      # as a drop, never a silent gap
-                        rec.record("drop", f.t_arrival, rid=f.rid,
-                                   stream=f.stream_id, seq=seq_of[f.rid])
-                    continue
-                responses.append(DetectionResponse(
-                    f.rid, boxes[j], scores[j], classes[j], valid[j],
-                    a.executor_idx, a.t_start, a.t_done, per_frame,
-                    stream_id=f.stream_id, seq=seq_of[f.rid]))
-        interpolated = 0
-        self._tracker_launches = self._tracker_ticks = 0
-        if self.track_and_interpolate and (dropped or responses):
-            responses = self._interpolate(frames, responses, seq_of,
-                                          stream_emit0 or {})
-            interpolated = sum(r.interpolated for r in responses)
-        responses.sort(key=lambda r: r.rid)       # sequence synchronizer
-        makespan = max((r.t_done for r in responses), default=0.0)
-        # per-stream reorder + drop accounting (the per-camera view of
-        # the same responses; one entry per stream_id seen in the input)
-        ordered = SequenceSynchronizer.order_per_stream(responses)
-        streams, emit_t = {}, {}
-        for sid, (rs, emits) in ordered.items():
-            streams[sid], emit_t[sid] = rs, emits
-        if rec.enabled:
-            # trace emits carry the warm-start emit floor forward (the
-            # sharded epoch loop slices ONE logical trace into calls, and
-            # a migrated stream's emits must stay monotone ACROSS calls —
-            # exactly the global clock the shard-report merge rebuilds).
-            # The report's emit_t stays the per-call clock, unchanged.
-            rec_emit = rec.record
-            for sid in sorted(streams):
-                clk = (stream_emit0 or {}).get(sid, 0.0)
-                for r, e in zip(streams[sid], emit_t[sid]):
-                    clk = max(clk, e)
-                    rec_emit("interp_emit" if r.interpolated else "emit",
-                             clk, rid=r.rid, stream=sid, seq=r.seq)
-        drop_stream: Dict[int, int] = {}
-        for f in dropped:
-            drop_stream[f.stream_id] = drop_stream.get(f.stream_id, 0) + 1
-        per_stream = {}
-        for sid, n in n_frames_stream.items():
-            rs = streams.setdefault(sid, [])
-            emits = emit_t.setdefault(sid, [])
-            mk = emits[-1] if emits else 0.0   # per-stream emit makespan
-            per_stream[sid] = {
-                "frames": n,
-                "dropped": drop_stream.get(sid, 0),
-                "interpolated": sum(r.interpolated for r in rs),
-                "coverage": len(rs) / max(n, 1),
-                "throughput_fps": len(rs) / max(mk, 1e-9),
-            }
-        # this call's failure-detection deltas, sparse per replica
-        # (all-empty dicts on the fault-free path)
-        fc1 = self.scheduler.fault_counts()
-        fault_counts = {
-            key: {i: fc1[key].get(i, 0) - fc0[key].get(i, 0)
-                  for i in set(fc1[key]) | set(fc0[key])
-                  if fc1[key].get(i, 0) - fc0[key].get(i, 0)}
-            for key in ("retries", "failovers", "frames_lost")}
-        return {
-            "responses": responses,
-            "dropped": [f.rid for f in dropped],
-            "coverage": len(responses) / max(len(frames), 1),
-            "interpolated": interpolated,
-            "throughput_fps": len(responses) / max(makespan, 1e-9),
-            "per_replica": _per_replica_counts(self.replicas, responses),
-            "n_streams": len(n_frames_stream),
-            "streams": streams,
-            "emit_t": emit_t,    # per-stream monotonic release clocks
-            "per_stream": per_stream,
-            "tracker_launches": self._tracker_launches,
-            "tracker_ticks": self._tracker_ticks,
-            "retries": fault_counts["retries"],
-            "failovers": fault_counts["failovers"],
-            "frames_lost": fault_counts["frames_lost"],
-            # latency distribution block (repro.obs.metrics): exact p50
-            # plus histogram-derived p95/p99 and mergeable rollups;
-            # interpolated frames land in interp_latency, never in the
-            # detection histogram
-            **detection_latency_keys(
-                responses, {f.rid: f.t_arrival for f in frames}),
-        }
+        from .runtime import ServingRuntime
+        rt = ServingRuntime(self, reset=reset, stream_seq0=stream_seq0,
+                            stream_emit0=stream_emit0)
+        rt.ingest(frames)
+        return rt.drain()
 
     def _interpolate(self, frames, responses, seq_of,
                      emit0) -> List[DetectionResponse]:

@@ -44,10 +44,8 @@ from ..core.synchronizer import SequenceSynchronizer
 from ..obs.metrics import merge_hist_dicts, quantile_of_dict
 from ..obs.trace import NULL_RECORDER
 from ..sharding.context import mesh_context
-from ..sharding.serving_rules import (constrain_detections, constrain_frames,
-                                      rebalance_streams, shard_streams)
+from ..sharding.serving_rules import constrain_detections, constrain_frames
 from .engine import DetectionEngine, FrameRequest
-from .faults import ShardFaultCursor
 
 
 def make_spmd_detect(cfg, params, mesh, *, score_thr: float = 0.4,
@@ -579,251 +577,21 @@ class ShardedDetectionEngine:
         ``shard_view`` of it and the epoch loop adds
         epoch/migrate/shard_down/shard_lost control events (the
         watchdog adds loan/restart events) — see ``repro.obs``."""
-        if self._shared_detect is not None:
-            self.warmup()
-        shard_of = shard_streams((f.stream_id for f in frames),
-                                 self.n_shards)
-        if not self.rebalance or self.n_shards == 1 or not frames:
-            out = self._serve_static(frames, shard_of)
-            if self.faults is not None:
-                self._attach_fault_keys(
-                    out, frames, lost=[], restarts=[], loans=[],
-                    t_rec=self.faults.last_event_t if frames else None)
-            return out
-        return self._serve_rebalancing(frames, shard_of)
+        from .runtime import ServingRuntime
+        rt = ServingRuntime(self)
+        rt.ingest(frames)
+        return rt.drain()
 
-    def _serve_static(self, frames: Sequence[FrameRequest],
-                      shard_of: Dict[int, int]) -> Dict:
-        """The pre-stealing single-pass path: one serve per shard under
-        the fixed ``shard_streams`` partition (bit-identical to the
-        engine before work stealing existed — the regression bar for
-        ``rebalance=False`` and ``n_shards=1``)."""
-        per_shard_frames: List[List[FrameRequest]] = [
-            [] for _ in range(self.n_shards)]
-        for f in frames:                      # preserves caller order
-            per_shard_frames[shard_of[f.stream_id]].append(f)
-        reports = [eng.serve(sub) for eng, sub in
-                   zip(self.engines, per_shard_frames)]
-        out = merge_shard_reports(frames, reports,
-                                  [len(eng.replicas)
-                                   for eng in self.engines])
-        out["shard_of_stream"] = shard_of
-        return out
-
-    def _serve_rebalancing(self, frames: Sequence[FrameRequest],
-                           shard_of: Dict[int, int]) -> Dict:
-        """Epoch loop: serve → observe → rebalance → migrate.
-
-        Epochs are fixed ``epoch_s`` virtual-time windows anchored at
-        the first arrival.  Within an epoch every shard serves its
-        sub-trace with the virtual clock CARRIED from the previous
-        epoch (``reset`` only on the first), so backlog built up under
-        a mis-partition is not forgiven at the boundary — it is exactly
-        the pressure signal the policy reads.  After each epoch the
-        per-shard observations (drops, residual backlog at the epoch's
-        last arrival, per-stream frame counts) feed
-        ``rebalance_streams``; migrated streams start the next epoch on
-        their new shard with their ``seq`` / emit-clock floors carried
-        over (warm-start), and every shard's lockstep tracker re-seeds
-        from the new epoch's first detections — the explicit epoch-
-        boundary handoff, never a silent mid-epoch reset.
-
-        Shard-level faults fold in here (``ShardFaultCursor``): a kill
-        loses the frames arriving while the shard is down (in-flight
-        work at the kill instant completes — the host's output buffer
-        survives), the shard stops heartbeating, and lost frames still
-        advance the per-stream ``seq`` floors so later epochs map to
-        the correct arrival indices.  Recovery (schedule revive or
-        watchdog restart) is boundary-quantized, which keeps each
-        stream's lost frames a contiguous suffix of its epoch arrivals
-        — the property the floor arithmetic relies on.  The watchdog
-        (``supervisor=``) acts at each boundary: restart + evacuation
-        for dead shards, then replica lending along the residual
-        pressure gradient when stream migration did not act."""
-        frames = sorted(frames, key=lambda f: f.t_arrival)
-        t0 = frames[0].t_arrival
-        windows: List[List[FrameRequest]] = []
-        for f in frames:
-            e = int((f.t_arrival - t0) // self.epoch_s)
-            while len(windows) <= e:
-                windows.append([])
-            windows[e].append(f)
-        # serve only the non-empty windows (an empty burst gap yields no
-        # observations to rebalance on) but keep their RAW window
-        # indices: reported migration epochs and ``n_epochs`` stay in
-        # fixed-window coordinates, so ``t0 + (epoch + 1) * epoch_s`` is
-        # the virtual time a recorded move took effect even across gaps
-        epochs = [(e, ef) for e, ef in enumerate(windows) if ef]
-        shard_of = dict(shard_of)
-        pool_sizes = [len(eng.replicas) for eng in self.engines]
-        seq0: Dict[int, int] = {}
-        emit0: Dict[int, float] = {}
-        reports: List[Dict] = []
-        report_shard: List[int] = []
-        report_epoch_idx: List[int] = []
-        migrations: List[Dict] = []
-        # fault/supervision state — all inert on the fault-free path
-        sup = self.supervisor
-        cursor = (ShardFaultCursor(self.faults, self.n_shards)
-                  if self.faults is not None
-                  and self.faults.has_shard_events else None)
-        heartbeat = {h: -1 for h in range(self.n_shards)}
-        lost: List[FrameRequest] = []
-        if sup is not None:
-            sup.begin(self.engines)
-        rec = self.recorder
-        for i, (raw_e, ef) in enumerate(epochs):
-            subs: List[List[FrameRequest]] = [
-                [] for _ in range(self.n_shards)]
-            for f in ef:
-                subs[shard_of[f.stream_id]].append(f)
-            t_end = ef[-1].t_arrival
-            w_start = t0 + raw_e * self.epoch_s
-            w_end = t0 + (raw_e + 1) * self.epoch_s
-            if rec.enabled:
-                rec.record("epoch", w_start, epoch=raw_e)
-            observations = []
-            down: List[int] = []
-            for h, (eng, sub) in enumerate(zip(self.engines, subs)):
-                lost_h: List[FrameRequest] = []
-                if cursor is not None:
-                    cut = cursor.begin_epoch(h, w_start, w_end)
-                    if cut is not None:
-                        lost_h = [f for f in sub if f.t_arrival >= cut]
-                        sub = [f for f in sub if f.t_arrival < cut]
-                    if cursor.is_down(h):
-                        down.append(h)      # no heartbeat this epoch
-                        if rec.enabled:
-                            rec.record("shard_down", w_start, shard=h,
-                                       epoch=raw_e)
-                    else:
-                        heartbeat[h] = raw_e
-                else:
-                    heartbeat[h] = raw_e
-                warm = {sid: seq0.get(sid, 0)
-                        for sid, hh in shard_of.items() if hh == h}
-                rep = eng.serve(sub, reset=(i == 0), stream_seq0=warm,
-                                stream_emit0={sid: emit0[sid]
-                                              for sid in warm
-                                              if sid in emit0})
-                reports.append(rep)
-                report_shard.append(h)
-                report_epoch_idx.append(raw_e)
-                obs_frames = {sid: v["frames"]
-                              for sid, v in rep["per_stream"].items()}
-                for f in lost_h:   # the policy sees true arrival rates
-                    obs_frames[f.stream_id] = \
-                        obs_frames.get(f.stream_id, 0) + 1
-                observations.append({
-                    # shard-lost frames are drops for the pressure
-                    # signal: a dead shard reads maximally pressured
-                    "drops": len(rep["dropped"]) + len(lost_h),
-                    "backlog_s":
-                        eng.backlog_snapshot(t_end)["backlog_s"],
-                    "frames": obs_frames,
-                })
-                for sid, v in rep["per_stream"].items():
-                    seq0[sid] = seq0.get(sid, 0) + v["frames"]
-                for f in lost_h:
-                    # lost frames still advance the seq floor: later
-                    # epochs' frames must map to their true per-stream
-                    # arrival indices or quality accounting corrupts
-                    if rec.enabled:
-                        # lost frames never reach an engine, so their
-                        # arrive + terminal events record here (frame
-                        # conservation holds over the whole trace)
-                        rec.record("arrive", f.t_arrival, rid=f.rid,
-                                   stream=f.stream_id,
-                                   seq=seq0.get(f.stream_id, 0), shard=h)
-                        rec.record("shard_lost", f.t_arrival, rid=f.rid,
-                                   stream=f.stream_id, shard=h)
-                    seq0[f.stream_id] = seq0.get(f.stream_id, 0) + 1
-                for sid, em in rep["emit_t"].items():
-                    if em:
-                        emit0[sid] = max(emit0.get(sid, 0.0), em[-1])
-                lost += lost_h
-            if i < len(epochs) - 1:
-                evac: List[int] = []
-                if sup is not None and cursor is not None:
-                    dead = sup.detect_dead(heartbeat, raw_e,
-                                           [bool(s) for s in subs])
-                    for h in dead:
-                        sup.handle_dead(self.engines, h, cursor, raw_e,
-                                        w_end)
-                    # every currently-down shard is excluded from the
-                    # stealing phase (and drained of streams), detected
-                    # or not — a dead host must never RECEIVE streams
-                    evac = sorted(set(down))
-                shard_of, moves = rebalance_streams(
-                    shard_of, observations,
-                    max_moves=self.max_moves_per_epoch,
-                    evacuate=tuple(evac))
-                migrations += [{"epoch": raw_e, "stream": sid,
-                                "src": src, "dst": dst}
-                               for sid, src, dst in moves]
-                if rec.enabled:
-                    for sid, src, dst in moves:
-                        rec.record("migrate", w_end, stream=sid,
-                                   src=src, dst=dst, epoch=raw_e)
-                if sup is not None:
-                    stole = any(src not in set(evac)
-                                for _, src, _ in moves)
-                    sup.rebalance_loans(self.engines, observations,
-                                        moved=stole, down=down,
-                                        epoch=raw_e,
-                                        epoch_s=self.epoch_s, t=w_end)
-        if sup is not None:
-            sup.finish(self.engines, epochs[-1][0],
-                       t=t0 + (epochs[-1][0] + 1) * self.epoch_s)
-            pool_sizes = sup.pool_sizes(self.engines)
-        out = merge_epoch_shard_reports(frames, reports, report_shard,
-                                        pool_sizes,
-                                        report_epoch=report_epoch_idx)
-        out["shard_of_stream"] = shard_of
-        out["migrations"] = migrations
-        out["n_epochs"] = len(windows)
-        if lost:
-            # fold the shard-lost frames into the drop accounting: they
-            # never reached an engine, so no report counted them
-            pos = {f.rid: k for k, f in enumerate(frames)}
-            out["dropped"] = sorted(out["dropped"]
-                                    + [f.rid for f in lost],
-                                    key=pos.__getitem__)
-            for f in lost:
-                agg = out["per_stream"].setdefault(
-                    f.stream_id, {"frames": 0, "dropped": 0,
-                                  "interpolated": 0, "coverage": 0.0,
-                                  "throughput_fps": 0.0})
-                agg["frames"] += 1
-                agg["dropped"] += 1
-            for sid in sorted({f.stream_id for f in lost}):
-                rs = out["streams"].setdefault(sid, [])
-                out["emit_t"].setdefault(sid, [])
-                agg = out["per_stream"][sid]
-                agg["coverage"] = len(rs) / max(agg["frames"], 1)
-            out["n_streams"] = len(out["per_stream"])
-        if self.faults is not None or sup is not None:
-            restarts = list(sup.restart_log) if sup is not None else []
-            loans = list(sup.loan_log) if sup is not None else []
-            t_cands = []
-            if self.faults is not None:
-                t_cands.append(self.faults.last_event_t)
-            t_cands += [r["t"] for r in restarts]
-            for ln in loans:
-                t_cands.append(t0 + (ln["epoch"] + 1) * self.epoch_s)
-                if ln["returned_epoch"] is not None:
-                    t_cands.append(
-                        t0 + (ln["returned_epoch"] + 1) * self.epoch_s)
-            t_rec = None
-            if t_cands:
-                # recovery acts at epoch boundaries: quantize the last
-                # fault/action up to the next boundary
-                k = int(np.ceil(max(max(t_cands) - t0, 0.0)
-                                / self.epoch_s - 1e-12))
-                t_rec = t0 + k * self.epoch_s
-            self._attach_fault_keys(out, frames, lost, restarts, loans,
-                                    t_rec)
-        return out
+    def reset(self):
+        """Clear per-serve virtual-clock state on EVERY shard engine
+        (replica ``busy_until`` / counts / EWMAs and each shard
+        scheduler's round bookkeeping) so repeated ``serve()`` calls
+        are independent.  Delegates to
+        ``ServingRuntime.reset_engines`` — the ONE reset semantic every
+        engine shares (warm service estimates and compiled programs
+        survive, like ``DetectionEngine.reset``)."""
+        from .runtime import ServingRuntime
+        ServingRuntime.reset_engines(self)
 
     # -------------------------------------------------------- fault report
     def _attach_fault_keys(self, out: Dict, frames, lost, restarts,

@@ -1,0 +1,338 @@
+"""Incremental serving core (``repro.serving.runtime``), event pipeline
+(``repro.serving.events``) and daemon (``repro.launch.daemon``).
+
+The load-bearing bar is bit-identity: any chunking of ``ingest`` +
+``advance`` must drain to byte-for-byte the one-shot batch ``serve``
+report — on the plain engine AND the rebalancing sharded engine under a
+seeded fault schedule.  On top of that: the unified ``reset`` semantic
+(back-to-back serves independent on every engine), rolling per-epoch
+reports that merge exactly (histograms summed bucket-wise, quantiles
+recomputed — never averaged), the trace-derived event bus (every
+recorded event routed, shard views included, audit-clean), and the
+daemon (virtual clock, graceful stop, drained in-flight frames with
+frame conservation)."""
+import io
+import json
+
+import numpy as np
+import pytest
+
+from repro.core import proxy_detect_fn_streams
+from repro.launch.daemon import ServingDaemon, VirtualClock, WallClock
+from repro.obs import audit_recorder
+from repro.obs.metrics import LatencyHistogram
+from repro.serving import (DetectionEngine, EventBus, FaultSchedule,
+                           JsonlSink, ServingRuntime,
+                           ShardedDetectionEngine, make_nvr_streams,
+                           topic_of)
+from test_sharded_serving import assert_reports_identical
+
+CHUNKS = (1, 3, 7, None)          # None = the whole trace in one chunk
+
+
+def nvr_setup(n_streams=3, n_frames=10, rate=4.0):
+    frames, frame_of, videos, dets = make_nvr_streams(
+        n_streams, n_frames, rate)
+    oracle = proxy_detect_fn_streams(videos, dets, frame_of)
+    return sorted(frames, key=lambda f: f.t_arrival), oracle
+
+
+def det_engine(oracle, **kw):
+    return DetectionEngine(detect_fn=oracle, n_replicas=2,
+                           service_time=0.3, track_and_interpolate=True,
+                           **kw)
+
+
+def feed_chunked(rt, frames, chunk):
+    step = chunk or len(frames)
+    for i in range(0, len(frames), step):
+        rt.ingest(frames[i:i + step])
+        rt.advance()              # watermark advance: nothing future
+
+
+# ------------------------------------------- chunked == one-shot batch
+@pytest.mark.parametrize("chunk", CHUNKS)
+def test_chunked_ingest_matches_one_shot_detection(chunk):
+    frames, oracle = nvr_setup()
+    base = det_engine(oracle).serve(frames)
+    rt = ServingRuntime(det_engine(oracle))
+    feed_chunked(rt, frames, chunk)
+    out = rt.drain()
+    assert set(out) == set(base)
+    assert_reports_identical(base, out)
+
+
+@pytest.mark.parametrize("chunk", CHUNKS)
+def test_chunked_ingest_matches_one_shot_sharded_faults(chunk):
+    """The hard configuration: rebalancing epochs + seeded replica AND
+    shard faults.  The pending-boundary restructure must reproduce the
+    batch epoch loop's action sequence exactly."""
+    frames, oracle = nvr_setup(n_streams=4, n_frames=12, rate=2.0)
+    kw = dict(detect_fn=oracle, n_shards=2, n_replicas=2,
+              service_time=0.3, track_and_interpolate=True,
+              rebalance=True, epoch_s=2.0)
+
+    def faults():
+        return FaultSchedule.random(
+            7, horizon_s=frames[-1].t_arrival, n_shards=2, n_replicas=2,
+            n_replica_events=2, n_shard_events=1)
+
+    base = ShardedDetectionEngine(faults=faults(), **kw).serve(frames)
+    assert base["faults"]["frames_lost_shard"]   # the chaos actually bit
+    rt = ServingRuntime(ShardedDetectionEngine(faults=faults(), **kw),
+                        streams=range(4))
+    feed_chunked(rt, frames, chunk)
+    out = rt.drain()
+    assert set(out) == set(base)
+    assert_reports_identical(base, out)
+
+
+@pytest.mark.parametrize("chunk", (1, 5))
+def test_chunked_ingest_matches_one_shot_sharded_static(chunk):
+    frames, oracle = nvr_setup(n_streams=4, n_frames=8, rate=2.0)
+    kw = dict(detect_fn=oracle, n_shards=2, n_replicas=2,
+              service_time=0.3, track_and_interpolate=True)
+    base = ShardedDetectionEngine(**kw).serve(frames)
+    rt = ServingRuntime(ShardedDetectionEngine(**kw), streams=range(4))
+    feed_chunked(rt, frames, chunk)
+    out = rt.drain()
+    assert set(out) == set(base)
+    assert_reports_identical(base, out)
+
+
+# ------------------------------------------------- unified reset story
+def test_unified_reset_back_to_back_detection():
+    frames, oracle = nvr_setup()
+    eng = det_engine(oracle)
+    r1 = eng.serve(frames)
+    r2 = eng.serve(frames)                 # serve() resets by default
+    assert_reports_identical(r1, r2)
+    eng.reset()                            # the documented explicit path
+    r3 = eng.serve(frames, reset=False)
+    assert_reports_identical(r1, r3)
+
+
+def test_unified_reset_back_to_back_sharded():
+    """``ShardedDetectionEngine.reset`` (new — the class had none) and
+    ``ServingRuntime.reset`` both route through ``reset_engines`` and
+    leave the engine exactly as serve()'s own reset would."""
+    frames, oracle = nvr_setup(n_streams=4, n_frames=8, rate=2.0)
+    seng = ShardedDetectionEngine(
+        detect_fn=oracle, n_shards=2, n_replicas=2, service_time=0.3,
+        track_and_interpolate=True, rebalance=True, epoch_s=2.0)
+    r1 = seng.serve(frames)
+    seng.reset()
+    r2 = seng.serve(frames)
+    assert_reports_identical(r1, r2)
+    rt = ServingRuntime(seng, streams=range(4))
+    rt.ingest(frames)
+    out1 = rt.drain()
+    rt.reset()                     # fresh watermark + segments + floors
+    rt.ingest(frames)
+    out2 = rt.drain()
+    assert_reports_identical(out1, out2)
+    assert_reports_identical(r1, out1)
+
+
+# ------------------------------------------------ rolling epoch reports
+def test_rolling_reports_merge_exactly_to_final():
+    frames, oracle = nvr_setup(n_streams=3, n_frames=12, rate=4.0)
+    rt = ServingRuntime(det_engine(oracle))
+    step = len(frames) // 3
+    epochs = []
+    for i in range(0, len(frames), step):
+        rt.ingest(frames[i:i + step])
+        epochs.append(rt.epoch_boundary())
+    assert len(rt.report(rolling=True)) == len(epochs)
+    final = rt.drain()
+    # every response lands in exactly one epoch window
+    rids = sorted(r.rid for e in epochs for r in e["responses"])
+    assert sorted(r.rid for r in final["responses"]) == rids
+    assert sum(len(e["dropped"]) for e in epochs) == len(final["dropped"])
+    # merge-never-average: histograms sum bucket-wise...
+    merged = LatencyHistogram()
+    for e in epochs:
+        h = LatencyHistogram()
+        h.counts = dict(e["latency_hist"]["counts"])
+        h.n, h.max = e["latency_hist"]["n"], e["latency_hist"]["max"]
+        merged.merge(h)
+    assert final["latency_hist"]["counts"] == merged.counts
+    assert final["latency_hist"]["n"] == merged.n
+    # ...and quantiles recompute from the merged buckets
+    assert final["p95_latency"] == merged.quantile(0.95)
+    assert final["p99_latency"] == merged.quantile(0.99)
+    # p50 is the exact median over the merged detections
+    lat = [r.t_done - r.t_start for r in final["responses"]
+           if not r.interpolated]
+    assert final["p50_latency"] == pytest.approx(float(np.median(lat)))
+    # per-stream frame totals conserve across the windows
+    for sid in final["per_stream"]:
+        assert final["per_stream"][sid]["frames"] == sum(
+            e["per_stream"].get(sid, {"frames": 0})["frames"]
+            for e in epochs)
+
+
+def test_mid_serve_report_is_non_destructive():
+    """A rolling peek must not perturb the final report: two identical
+    runtimes, one peeked mid-serve, drain bit-identically."""
+    frames, oracle = nvr_setup()
+    ra = ServingRuntime(det_engine(oracle))
+    rb = ServingRuntime(det_engine(oracle))
+    half = len(frames) // 2
+    for rt in (ra, rb):
+        rt.ingest(frames[:half])
+        rt.advance()
+    peek = ra.report(rolling=False)
+    assert peek["partial"] is True
+    assert peek["responses"]             # something already completed
+    for rt in (ra, rb):
+        rt.ingest(frames[half:])
+    assert_reports_identical(rb.drain(), ra.drain())
+
+
+def test_sharded_rolling_rollups():
+    frames, oracle = nvr_setup(n_streams=4, n_frames=12, rate=2.0)
+    seng = ShardedDetectionEngine(
+        detect_fn=oracle, n_shards=2, n_replicas=2, service_time=0.3,
+        track_and_interpolate=True, rebalance=True, epoch_s=2.0)
+    rt = ServingRuntime(seng, streams=range(4))
+    feed_chunked(rt, frames, 3)
+    final = rt.drain()
+    per_epoch = rt.report(rolling=True)
+    # the rolling rollups ARE the final report's per_epoch entries
+    assert per_epoch == [final["per_epoch"][e]
+                         for e in sorted(final["per_epoch"])]
+    # fault-free + blocking mode: every frame ends up in some window
+    assert sum(e["responses"] for e in per_epoch) == len(frames)
+    assert sum(e["dropped"] for e in per_epoch) == 0
+
+
+# ------------------------------------------------- contract violations
+def test_watermark_violation_raises():
+    frames, oracle = nvr_setup()
+    rt = ServingRuntime(det_engine(oracle))
+    rt.ingest(frames[5:])
+    with pytest.raises(ValueError, match="watermark"):
+        rt.ingest(frames[:5])
+
+
+def test_incremental_sharded_requires_streams():
+    frames, oracle = nvr_setup(n_streams=4, n_frames=6, rate=2.0)
+    kw = dict(detect_fn=oracle, n_shards=2, n_replicas=2,
+              service_time=0.3, track_and_interpolate=True)
+    rt = ServingRuntime(ShardedDetectionEngine(**kw))   # no streams=
+    rt.ingest(frames)
+    with pytest.raises(RuntimeError, match="streams"):
+        rt.epoch_boundary()
+    base = ShardedDetectionEngine(**kw).serve(frames)
+    out = rt.drain()                  # lazy batch replay is still exact
+    assert_reports_identical(base, out)
+
+
+def test_runtime_rejects_bad_engines_and_hooks():
+    frames, oracle = nvr_setup(n_streams=2, n_frames=2, rate=2.0)
+    seng = ShardedDetectionEngine(detect_fn=oracle, n_shards=2,
+                                  n_replicas=2, service_time=0.3)
+    with pytest.raises(ValueError, match="warm-start"):
+        ServingRuntime(seng, stream_seq0={0: 1})
+    with pytest.raises(TypeError):
+        ServingRuntime(object())
+
+
+# ------------------------------------------------------- event pipeline
+def test_event_bus_taps_every_trace_event():
+    frames, oracle = nvr_setup(n_streams=4, n_frames=8, rate=2.0)
+    bus = EventBus()
+    got = []
+    h = bus.subscribe(lambda t, e: got.append((t, e["kind"])),
+                      topics=("detection", "drop"))
+    buf = io.StringIO()
+    sink = JsonlSink(buf)
+    bus.subscribe(sink)
+    rec = bus.recorder()
+    seng = ShardedDetectionEngine(
+        detect_fn=oracle, n_shards=2, n_replicas=2, service_time=0.3,
+        track_and_interpolate=True, recorder=rec)
+    seng.serve(frames)
+    # every recorded event was published exactly once (shard views
+    # append to the parent log directly — the tap must cover them too)
+    assert sum(bus.counts.values()) == len(rec.events) == sink.n_written
+    assert any("shard" in e for e in rec.events)
+    assert got and all(t in ("detection", "drop") for t, _ in got)
+    lines = [json.loads(s) for s in buf.getvalue().splitlines()]
+    assert len(lines) == len(rec.events)
+    assert {ln["kind"] for ln in lines} == {e["kind"] for e in rec.events}
+    assert all(ln["topic"] == topic_of(ln["kind"]) for ln in lines)
+    assert audit_recorder(rec).ok     # the tapped log is still the log
+    bus.unsubscribe(h)
+    n = len(got)
+    bus.publish({"kind": "complete", "t": 0.0})
+    assert len(got) == n              # unsubscribed
+    with pytest.raises(ValueError, match="unknown topics"):
+        bus.subscribe(lambda *a: None, topics=("nope",))
+    assert topic_of("some_future_kind") == "lifecycle"
+
+
+# --------------------------------------------------------------- daemon
+def test_daemon_virtual_clock_matches_batch_and_audits():
+    frames, oracle = nvr_setup(n_streams=4, n_frames=8, rate=2.0)
+    kw = dict(detect_fn=oracle, n_shards=2, n_replicas=2,
+              service_time=0.3, track_and_interpolate=True)
+    base = ShardedDetectionEngine(**kw).serve(frames)
+    bus = EventBus()
+    rec = bus.recorder()
+    eng = ShardedDetectionEngine(recorder=rec, **kw)
+    daemon = ServingDaemon(ServingRuntime(eng, streams=range(4)),
+                           clock=VirtualClock(), chunk=3)
+    out = daemon.run(frames)
+    assert daemon.frames_ingested == len(frames)
+    assert daemon.runtime.frames_pending == 0
+    assert_reports_identical(base, out)
+    res = audit_recorder(rec)         # frame conservation et al.
+    assert res.ok, res.violations[:3]
+    assert bus.counts.get("detection", 0) > 0
+
+
+def test_daemon_graceful_stop_drains_ingested_frames():
+    frames, oracle = nvr_setup(n_streams=3, n_frames=8, rate=4.0)
+    rt = ServingRuntime(det_engine(oracle))
+    daemon = ServingDaemon(rt, clock=VirtualClock(), chunk=2)
+
+    def feed():
+        for k, f in enumerate(frames):
+            if k == 10:
+                daemon.request_stop()
+            yield f
+
+    out = daemon.run(feed())
+    n = daemon.frames_ingested
+    assert 0 < n <= 10
+    assert rt.frames_pending == 0     # in-flight frames were drained
+    accounted = {r.rid for r in out["responses"]} | set(out["dropped"])
+    assert accounted == {f.rid for f in frames[:n]}
+
+
+def test_clocks():
+    c = VirtualClock()
+    assert c.now() == 0.0
+    c.sleep_until(2.5)
+    c.sleep_until(1.0)                # never goes backwards
+    assert c.now() == 2.5
+    w = WallClock()
+    t0 = w.now()
+    w.sleep_until(t0 - 1.0)           # already past: returns immediately
+    assert w.now() >= t0
+    with pytest.raises(ValueError):
+        ServingDaemon(ServingRuntime(det_engine(nvr_setup()[1])),
+                      chunk=0)
+
+
+def test_daemon_cli_smoke(tmp_path, capsys):
+    from repro.launch import daemon as dmod
+    ev = tmp_path / "ev.jsonl"
+    dmod.main(["--cameras", "3", "--frames", "6", "--shards", "2",
+               "--clock", "virtual", "--events", str(ev), "--chunk", "2"])
+    out = capsys.readouterr().out
+    assert "audit=ok" in out and "pending=0" in out
+    lines = [json.loads(s) for s in ev.read_text().splitlines()]
+    assert lines and all("topic" in ln and "kind" in ln for ln in lines)
