@@ -56,7 +56,7 @@ def main():
     names = (args.only.split(",") if args.only else
              list(benches) + ["kernels", "nms", "tracking", "nvr",
                               "sharded", "faults", "obs", "daemon",
-                              "roofline"])
+                              "cascade", "roofline"])
 
     print("name,us_per_call,derived")
     for name in names:
@@ -216,6 +216,34 @@ def main():
               f"pending={dm['pending_after_drain']} "
               f"cov={dm['coverage']:.3f} "
               f"audit={'ok' if dm['audit_ok'] else 'FAIL'}")
+
+    if "cascade" in names:
+        # transprecise cascade: per-micro-batch model selection on the
+        # sinusoidal overload cycle; derived = cascade tracked mAP
+        # minus the best fixed-model baseline's (strictly > 0 asserted
+        # inside).  Second row: the fast+heavy ROI second pass; derived
+        # = pixel reduction vs full-frame re-detection (> 0.5 gated).
+        from benchmarks.cascade_bench import (scenario_cascade_overload,
+                                              scenario_roi_sparse)
+        t0 = time.perf_counter()
+        ov, ok_ov = scenario_cascade_overload(192, 96)
+        assert ok_ov, "cascade lost to a fixed-model baseline"
+        best_fixed = max(f["map_mean"] for f in ov["fixed"].values())
+        print(f"cascade_overload,{(time.perf_counter() - t0) * 1e6:.0f},"
+              f"{ov['cascade']['map_mean'] - best_fixed:.4f}")
+        print(f"# cascade: map={ov['cascade']['map_mean']:.4f} "
+              f"best_fixed={best_fixed:.4f} "
+              f"models={ov['cascade']['models']} "
+              f"switches={ov['cascade']['switches']} "
+              f"drops={ov['cascade']['dropped']}")
+        t0 = time.perf_counter()
+        roi, ok_roi = scenario_roi_sparse(24)
+        assert ok_roi, "ROI pass below the 50% pixel-reduction gate"
+        print(f"cascade_roi,{(time.perf_counter() - t0) * 1e6:.0f},"
+              f"{roi['pixel_reduction']:.4f}")
+        print(f"# roi: passes={roi['roi_passes']} "
+              f"px {roi['px_full']:.0f}->{roi['px_roi']:.0f} "
+              f"audit={'ok' if roi['audit_ok'] else 'FAIL'}")
 
     if "roofline" in names:
         try:

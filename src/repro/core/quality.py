@@ -43,6 +43,11 @@ NOISE = {
     # localization+precision for SSD, recall for YOLO)
     "yolov3": dict(c=0.05, s=0.055, miss=0.13, fp=0.5, max_miss_diff=99.0),
     "ssd300": dict(c=0.06, s=0.07, miss=0.28, fp=1.3, max_miss_diff=1.5),
+    # tiny-YOLO band for the transprecise cascade's fast first pass:
+    # clearly worse than both paper models (high miss, noisy fps) so
+    # the fast/medium/heavy quality ordering is strict
+    "yolov3_tiny": dict(c=0.08, s=0.09, miss=0.38, fp=2.0,
+                        max_miss_diff=1.3),
 }
 # per-video difficulty multiplier (ADL-Rundle-6 is the harder scene in the
 # paper: 1080p static camera, more/smaller objects)
@@ -469,9 +474,17 @@ def evaluate_map_dets(video: SyntheticVideo, dets: Sequence,
     ``classes`` / ``scores`` attributes (``Detections``,
     ``tracking.TrackedFrame``) or None for a frame with no output
     (which still contributes its ground truth to the recall
-    denominator, exactly like ``evaluate_map``)."""
+    denominator, exactly like ``evaluate_map``).
+
+    Empty inputs are explicit, not incidental: a zero-frame ``dets``
+    returns 0.0 (there is nothing to score — previously this raised
+    ``ValueError`` from ``max()`` over an empty per-frame partition),
+    and an all-``None``/all-empty stream scores 0.0 through the normal
+    zero-detection AP path."""
     C = video.N_CLASSES
     F = len(dets)
+    if F == 0:
+        return 0.0
     cls_masks = [video.classes == c for c in range(C)]
     n_gt = {c: F * int(np.sum(m)) for c, m in enumerate(cls_masks)}
     all_gt = video.boxes_at_many(np.arange(F, dtype=np.int64))
@@ -526,7 +539,13 @@ def track_quality(video: SyntheticVideo, tracked: Sequence,
       emitted box at ``iou_thr``.
     * ``fragments``    — covered -> uncovered transitions while the
       object remains in frame (track continuity).
+
+    An empty ``tracked`` stream returns the explicit all-zero schema
+    (coverage 0.0, no switches, no fragments) so zero-frame reports
+    carry the same keys as populated ones.
     """
+    if not len(tracked):
+        return {"id_switches": 0.0, "coverage": 0.0, "fragments": 0.0}
     last_id: Dict[int, int] = {}
     prev_cov: Dict[int, bool] = {}
     switches = frags = covered = total = 0

@@ -31,6 +31,12 @@ pattern for the tracking subsystem's data-association step (IoU cost
 matrix + greedy assignment fused into one launch per frame batch, XLA
 twin ``greedy_assign_xla``, oracle ``ref.greedy_assign_ref``,
 dispatch ``ops.greedy_assign``).
+
+``roi.crop_resize_pallas`` / ``roi.uncrop_boxes_pallas`` carry the
+cascade's hierarchical second pass (cheap first-pass boxes -> ROI crops
+batched into the heavy model -> detections mapped back to the parent
+frame), again with XLA twins and ``ref`` oracles; the nearest-neighbor
+gather is expressed as two one-hot matmuls so it runs on the MXU.
 """
 from . import ops, ref
 from .association import greedy_assign_pallas, greedy_assign_xla
@@ -38,7 +44,11 @@ from .decode_attention import decode_attention
 from .flash_attention import flash_attention
 from .iou import iou_matrix
 from .nms import batched_nms_pallas, batched_nms_xla
+from .roi import (crop_resize_pallas, crop_resize_xla,
+                  uncrop_boxes_pallas, uncrop_boxes_xla)
 
 __all__ = ["ops", "ref", "decode_attention", "flash_attention",
            "iou_matrix", "batched_nms_pallas", "batched_nms_xla",
-           "greedy_assign_pallas", "greedy_assign_xla"]
+           "greedy_assign_pallas", "greedy_assign_xla",
+           "crop_resize_pallas", "crop_resize_xla",
+           "uncrop_boxes_pallas", "uncrop_boxes_xla"]

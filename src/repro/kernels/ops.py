@@ -28,6 +28,10 @@ from .flash_attention import flash_attention as _flash_pallas
 from .iou import iou_matrix as _iou_pallas
 from .nms import batched_nms_pallas as _nms_pallas
 from .nms import batched_nms_xla as _nms_xla
+from .roi import crop_resize_pallas as _crop_pallas
+from .roi import crop_resize_xla as _crop_xla
+from .roi import uncrop_boxes_pallas as _uncrop_pallas
+from .roi import uncrop_boxes_xla as _uncrop_xla
 
 
 def _interpret() -> bool:
@@ -104,6 +108,31 @@ def greedy_assign(t_boxes, d_boxes, *, t_mask=None, d_mask=None,
                              interpret=_interpret())
     return _assoc_xla(t_boxes, d_boxes, t_mask, d_mask, t_cls, d_cls,
                       iou_thr=iou_thr)
+
+
+def crop_resize(images, rois, *, out_size, use_pallas=True):
+    """ROI crop+resize for the cascade's hierarchical second pass:
+    images (B, H, W, ch), rois (B, R, 4) normalized xyxy ->
+    crops (B, R, C, C, ch) float32.  Like NMS, ``use_pallas=False``
+    routes to the XLA twin of the same float32 index math (the
+    production path on non-TPU hosts); ``ref.crop_resize_ref`` is the
+    bit-compatibility oracle."""
+    if not use_pallas:
+        return _crop_xla(images, rois, out_size=out_size)
+    return _crop_pallas(images, rois, out_size=out_size,
+                        interpret=_interpret())
+
+
+def uncrop_boxes(boxes, rois, *, bounds, crop_size, use_pallas=True):
+    """Map second-pass detections from crop pixel coordinates back into
+    the parent frame.  boxes (..., 4) in [0, crop_size], rois (..., 4)
+    normalized windows (broadcast), bounds = (W, H).  XLA twin on
+    ``use_pallas=False``; ``ref.uncrop_boxes_ref`` is the oracle."""
+    if not use_pallas:
+        return _uncrop_xla(boxes, rois, bounds=tuple(bounds),
+                           crop_size=crop_size)
+    return _uncrop_pallas(boxes, rois, bounds=tuple(bounds),
+                          crop_size=crop_size, interpret=_interpret())
 
 
 def nms(boxes, scores, iou_thr=0.5, max_out=64, use_pallas=True):

@@ -46,6 +46,15 @@ def serve_frames(args):
     kw = dict(n_shards=args.shards, n_replicas=args.n_replicas,
               scheduler=args.scheduler, track_and_interpolate=True,
               recorder=recorder)
+    catalog = None
+    if args.models:
+        from repro.serving import ModelCatalog, paper_catalog
+        full = paper_catalog()
+        names = [m.strip() for m in args.models.split(",") if m.strip()]
+        catalog = ModelCatalog([full[m] for m in names])
+        spec = videos[0].spec
+        kw.update(catalog=catalog, roi=args.roi,
+                  roi_bounds=(spec.width, spec.height))
     if mesh is not None:
         eng = ShardedDetectionEngine(mesh=mesh, **kw)
         # the SPMD path runs the real mini-SSD: give it real-sized
@@ -54,6 +63,11 @@ def serve_frames(args):
         rng = np.random.default_rng(0)
         for f in frames:
             f.image = rng.random((size, size, 3)).astype(np.float32)
+    elif catalog is not None:   # transprecise oracle: per-band detectors
+        from repro.serving import make_cascade_detect_fn
+        eng = ShardedDetectionEngine(
+            detect_fn=make_cascade_detect_fn(videos, frame_of, catalog),
+            **kw)
     else:                      # oracle fallback: per-camera proxy detectors
         eng = ShardedDetectionEngine(
             detect_fn=proxy_detect_fn_streams(videos, dets, frame_of),
@@ -70,6 +84,13 @@ def serve_frames(args):
         print(f"  shard {h}: cameras={shard['streams']} "
               f"frames={shard['frames']} dropped={shard['dropped']} "
               f"tracker_launches={shard['tracker_launches']}")
+    if args.models:
+        red = out["roi_pixel_reduction"]
+        print(f"cascade models={out['models']} "
+              f"switches={out['model_switches']} "
+              f"map_estimate={out['map_estimate']:.3f} "
+              f"roi_passes={out['roi_pixels']['passes']} "
+              f"roi_pixel_reduction={red:.3f}")
     if q is not None:
         print(f"tracked mAP mean={q['map_mean']*100:.1f}% "
               f"min={q['map_min']*100:.1f}%")
@@ -109,6 +130,15 @@ def main():
     ap.add_argument("--spmd", action="store_true",
                     help="frames payload: use the mesh SPMD detect path "
                          "(mini-SSD) instead of the proxy oracle")
+    ap.add_argument("--models", default=None, metavar="fast,heavy",
+                    help="frames payload: comma subset of "
+                         "fast/medium/heavy -> transprecise cascade "
+                         "(per-micro-batch model selection over the "
+                         "paper_catalog profiles)")
+    ap.add_argument("--roi", action="store_true",
+                    help="frames payload: hierarchical ROI second pass "
+                         "(cheap first-pass boxes re-detected by the "
+                         "heaviest catalog model; needs --models)")
     ap.add_argument("--arch", default="qwen3-4b")
     ap.add_argument("--preset", default="smoke")
     ap.add_argument("--n-replicas", type=int, default=4)

@@ -26,6 +26,18 @@ a recorded event list and verifies:
 4. **Loans are LIFO-returned** — ``loan_return`` events per borrower
    must pop the most recent outstanding ``loan`` (the tail-replica
    lending discipline), and every loan must be returned by trace end.
+5. **Model switches only at micro-batch boundaries** — a
+   ``model_switch`` names the micro-batch it takes effect for
+   (``batch``); it must be recorded BEFORE any frame is enqueued to
+   that ``(shard, batch)``.  A switch after the batch started filling
+   would mean frames priced/detected under two different models in one
+   batch.  (Batch numbers are monotone across epoch segments, so the
+   pair never repeats within a trace.)
+6. **ROI containment** — every ``roi_pass`` window must lie inside its
+   parent frame ``bounds``, the pixels read must not exceed the full
+   frame, and the second pass's detections (``det_extent``) must land
+   inside the frame — a cropped re-detection can never escape the
+   image it came from.
 
 ``audit_events`` returns an ``AuditResult`` whose ``violations`` list
 is empty on a clean trace; each violation is a dict with a ``rule``
@@ -59,7 +71,7 @@ def _lane(ev: dict) -> Tuple[int, int]:
 
 def audit_events(events: List[dict],
                  max_violations: int = 50) -> AuditResult:
-    """Replay ``events`` (raw recorder order) and check the four
+    """Replay ``events`` (raw recorder order) and check the six
     invariants in the module docstring.  Events may be passed in any
     order; they are re-sorted by code order ``i`` first."""
     evs = sorted(events, key=lambda e: e["i"])
@@ -83,9 +95,12 @@ def audit_events(events: List[dict],
     dead: Dict[Tuple[int, int], dict] = {}          # lane -> mark event
     # -- loan stacks ---------------------------------------------------
     loans: Dict[int, List[dict]] = {}               # borrower -> stack
+    # -- micro-batches already filling (model switches must precede) ---
+    started: set = set()                            # (shard, batch)
 
     n = {"arrive": 0, "emit": 0, "interp_emit": 0, "drop": 0,
-         "shard_lost": 0, "dispatch": 0, "loan": 0}
+         "shard_lost": 0, "dispatch": 0, "loan": 0, "model_switch": 0,
+         "roi_pass": 0}
 
     for ev in evs:
         kind = ev["kind"]
@@ -130,6 +145,33 @@ def audit_events(events: List[dict],
                 flag("frame_conservation", ev,
                      why=f"lost after terminal {state[rid]}")
             state[rid] = "shard_lost"
+        elif kind == "enqueue":
+            started.add((ev.get("shard", 0), ev.get("batch")))
+        elif kind == "model_switch":
+            n["model_switch"] += 1
+            key = (ev.get("shard", 0), ev.get("batch"))
+            if key in started:
+                flag("model_switch_boundary", ev,
+                     why="switch after the micro-batch started filling")
+        elif kind == "roi_pass":
+            n["roi_pass"] += 1
+            W, H = ev.get("bounds", (float("inf"), float("inf")))
+            eps = 1e-6 * max(W, H, 1.0)
+            for r in ev.get("rois", ()):
+                if (r[0] < -eps or r[1] < -eps
+                        or r[2] > W + eps or r[3] > H + eps
+                        or r[2] < r[0] or r[3] < r[1]):
+                    flag("roi_containment", ev, roi=list(r),
+                         why="ROI window escapes the parent frame")
+            if ev.get("px_roi", 0.0) > ev.get("px_full", 0.0) + eps:
+                flag("roi_containment", ev,
+                     why="ROI pixels exceed the full frame")
+            ext = ev.get("det_extent")
+            if ext is not None and (ext[0] < -eps or ext[1] < -eps
+                                    or ext[2] > W + eps
+                                    or ext[3] > H + eps):
+                flag("roi_containment", ev, det_extent=list(ext),
+                     why="second-pass detection outside the parent frame")
         elif kind == "dispatch":
             n["dispatch"] += 1
             lane = _lane(ev)

@@ -29,6 +29,13 @@ and the schedulers):
 * ``drop``       — the engine dropped the frame at arrival
 * ``emit`` / ``interp_emit`` — the per-stream reorder buffer released
   the frame (``interp_emit``: a tracker-coasted re-emission)
+* ``model_switch`` — the transprecise cascade changed model at a
+  micro-batch boundary (``batch``, ``model``); audited: the switch
+  must precede every ``enqueue`` of its batch
+* ``roi_pass``   — hierarchical second pass over one frame (``rid``,
+  ``model``, ``n_rois``, ``px_full``/``px_roi``, the absolute ``rois``
+  and ``bounds``, plus the final detections' ``det_extent``); audited
+  for containment
 
 control plane (recorded by ``ShardedDetectionEngine`` and ``Watchdog``):
 

@@ -28,6 +28,17 @@ fail over; the sharded epoch loop loses a killed shard's frames and a
 along the pressure gradient).  An empty schedule is inert: the
 fault-free report is bit-identical to an engine built without one.
 
+Transprecise cascade (``repro.serving.models`` /
+``repro.serving.cascade``): a ``ModelCatalog`` of loadable model
+profiles (per-model service rate + accuracy proxy, ``paper_catalog``
+for the ProxyDetector fast/medium/heavy triple) attached to every
+replica, a deterministic virtual-time ``ModelSelector`` that re-picks
+the serving model at micro-batch boundaries from backlog + arrival
+rate (degrade under pressure, hysteretic upgrade), and a hierarchical
+ROI second pass (cheap first-pass boxes -> ``kernels.roi`` crops ->
+heavy model).  A single-entry catalog is bit-identical to the plain
+engine.
+
 Incremental core (``repro.serving.runtime``): both batch ``serve()``
 entry points are thin trace-replay drivers over ``ServingRuntime`` —
 an always-on core with ``ingest`` / ``advance`` / ``epoch_boundary`` /
@@ -38,11 +49,14 @@ event pipeline from the same ``obs.TraceRecorder`` log (``EventBus`` /
 ``TapRecorder`` / ``JsonlSink``); ``repro.launch.daemon`` is the
 long-lived entry point driving both from a pluggable clock.
 """
+from .cascade import ModelSelector
 from .engine import (DetectionEngine, DetectionResponse, FrameRequest,
                      ReplicaExecutor, Request, Response, ServingEngine)
 from .events import EventBus, JsonlSink, TapRecorder, topic_of
 from .faults import (FaultEvent, FaultSchedule, ReplicaFaultView,
                      ShardFaultCursor)
+from .models import (ModelCatalog, ModelProfile, make_cascade_detect_fn,
+                     paper_catalog)
 from .nvr import make_nvr_streams, make_skewed_streams
 from .runtime import ServingRuntime
 from .sharded import (ShardedDetectionEngine, make_spmd_detect,
@@ -51,9 +65,11 @@ from .supervisor import Watchdog
 
 __all__ = ["DetectionEngine", "DetectionResponse", "EventBus",
            "FaultEvent", "FaultSchedule", "FrameRequest", "JsonlSink",
+           "ModelCatalog", "ModelProfile", "ModelSelector",
            "ReplicaFaultView", "Request", "Response", "ReplicaExecutor",
            "ServingEngine", "ServingRuntime", "ShardFaultCursor",
            "ShardedDetectionEngine", "TapRecorder", "Watchdog",
-           "make_nvr_streams", "make_skewed_streams", "make_spmd_detect",
+           "make_cascade_detect_fn", "make_nvr_streams",
+           "make_skewed_streams", "make_spmd_detect",
            "merge_epoch_shard_reports", "merge_shard_reports",
-           "topic_of"]
+           "paper_catalog", "topic_of"]

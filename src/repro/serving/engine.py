@@ -134,6 +134,12 @@ class ReplicaExecutor:
         self.ewma_service = None
         self._last_wall = 0.1
         self.faults = None            # optional faults.ReplicaFaultView
+        # loadable-model catalog (serving.models.ModelCatalog) — attached
+        # by the owning engine.  It travels WITH the executor: replica
+        # lending moves the object into the borrower's pool, so a guest
+        # keeps its home catalog, and a dead replica's catalog leaves the
+        # capacity pool with it.
+        self.catalog = None
 
     @property
     def mu_effective(self) -> float:
@@ -376,6 +382,21 @@ class DetectionEngine:
       ``frames_lost`` keys count the outcomes per replica.  An empty
       schedule (or ``None``) leaves every path bit-identical to the
       pre-fault engine.
+    * ``catalog=`` gives every replica a ``serving.models.ModelCatalog``
+      of loadable model profiles and turns on per-micro-batch model
+      selection (``serving.cascade.ModelSelector``): the heaviest model
+      whose pooled ``mu`` sustains the arrival-rate estimate, degrade
+      under backlog pressure, hysteretic upgrade when slack returns.
+      ``roi=True`` additionally runs the hierarchical second pass
+      whenever a lighter model was selected: the first pass's boxes
+      become ROI windows (``roi_max`` top-scored, padded ``roi_pad``,
+      clamped to ``roi_bounds``) batched through the heavy model, with
+      per-frame pixel-reduction accounting.  A single-entry catalog
+      never switches and never triggers ROI — bit-identical to pinning
+      ``service_time`` to that profile.  Reports gain ``models`` /
+      ``model_of_frame`` / ``model_map_est`` / ``model_switches`` /
+      ``map_estimate`` / ``roi_pixels`` / ``roi_pixel_reduction``
+      (present, empty, without a catalog).
     """
 
     def __init__(self, cfg=None, params=None, n_replicas: int = 4,
@@ -390,7 +411,9 @@ class DetectionEngine:
                  service_time: Optional[float] = None,
                  faults=None, fault_shard: int = 0,
                  timeout_k: float = 4.0, max_retries: int = 1,
-                 recorder=None):
+                 recorder=None, catalog=None, selector_kw=None,
+                 roi: bool = False, roi_bounds=None, roi_max: int = 4,
+                 roi_pad: float = 0.1, roi_crop: Optional[int] = None):
         if n_replicas < 1:
             raise ValueError(f"n_replicas must be >= 1, got {n_replicas}: "
                              "an empty replica pool can never serve")
@@ -435,17 +458,88 @@ class DetectionEngine:
         # so this engine's events carry their failure domain.
         self.recorder = recorder if recorder is not None else NULL_RECORDER
         self.scheduler.recorder = self.recorder
+        # transprecise cascade (serving.models / serving.cascade): a
+        # missing or empty catalog normalizes to None and leaves every
+        # existing path untouched.  The selector lives on the ENGINE so
+        # scheduler health probes / pool resizes never reset its
+        # hysteresis state; each replica carries the catalog object so
+        # lending and deaths move per-model capacity with the executor.
+        from .models import as_catalog
+        self.catalog = as_catalog(catalog)
+        self.cascade = None
+        if self.catalog is not None:
+            from .cascade import ModelSelector
+            self.cascade = ModelSelector(self.catalog,
+                                         **(selector_kw or {}))
+        for r in self.replicas:
+            r.catalog = self.catalog
+        self.roi = bool(roi)
+        self.roi_bounds = tuple(roi_bounds) if roi_bounds is not None else None
+        self.roi_max = roi_max
+        self.roi_pad = roi_pad
+        self.roi_crop = roi_crop
+        self._use_pallas = use_pallas
+        # capability probe: does a custom detect_fn accept the cascade's
+        # model= / rois= keywords?  A plain oracle keeps its exact
+        # 2-argument call, so the no-catalog path is bit-identical.
+        self._fn_takes_model = self._fn_takes_rois = False
+        if detect_fn is not None:
+            try:
+                import inspect
+                ps = inspect.signature(detect_fn).parameters
+                self._fn_takes_model = "model" in ps
+                self._fn_takes_rois = "rois" in ps
+            except (TypeError, ValueError):
+                pass
         self._warm = False
 
-    def _detect_batch(self, images: np.ndarray, rids=None):
+    def _detect_batch(self, images: np.ndarray, rids=None, model=None,
+                      rois=None):
         """One fused launch for a full micro-batch; returns numpy
-        results + measured wall seconds."""
+        results + measured wall seconds.  ``model``/``rois`` are the
+        cascade hooks, forwarded only to detect_fns that declare them."""
         t0 = time.perf_counter()
         if self._detect_fn is not None:
-            out = self._detect_fn(images, rids)
+            kw = {}
+            if model is not None and self._fn_takes_model:
+                kw["model"] = model
+            if rois is not None and self._fn_takes_rois:
+                kw["rois"] = rois
+            out = self._detect_fn(images, rids, **kw)
         else:
             out = jax.block_until_ready(self._infer(jnp.asarray(images)))
         return tuple(np.asarray(o) for o in out), time.perf_counter() - t0
+
+    def _model_caps(self) -> Dict[str, float]:
+        """Summed healthy-pool service rate (frames/s) per model name —
+        the feasibility signal ``ModelSelector.decide`` consumes.  Each
+        replica contributes from ITS OWN catalog (a lent guest carries
+        its home catalog; a model a guest cannot load adds nothing), and
+        unhealthy replicas contribute nothing at all, so a death
+        removes its catalog's capacity the moment the scheduler marks
+        it."""
+        caps: Dict[str, float] = {}
+        for r, ok in zip(self.replicas, self.scheduler.healthy):
+            if not ok:
+                continue
+            cat = r.catalog if r.catalog is not None else self.catalog
+            if cat is None:
+                continue
+            for p in cat:
+                caps[p.name] = caps.get(p.name, 0.0) + p.mu / r.speed
+        return caps
+
+    def _apply_model(self, model: str, extra_s: float = 0.0):
+        """Pin each replica's service estimate to the selected model's
+        profile (plus the ROI second-pass surcharge).  Replicas whose
+        own catalog pins a different ``service_s`` for the same model
+        name use theirs (heterogeneous pools); profiles without
+        ``service_s`` leave the measured-wall estimate in charge."""
+        for r in self.replicas:
+            cat = r.catalog if r.catalog is not None else self.catalog
+            prof = cat.get(model) if cat is not None else None
+            if prof is not None and prof.service_s is not None:
+                r._last_wall = prof.service_s + extra_s
 
     def warmup(self):
         mb = self.max_micro_batch

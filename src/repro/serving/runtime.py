@@ -63,6 +63,7 @@ from ..sharding.serving_rules import rebalance_streams, shard_streams
 from .engine import (DetectionEngine, DetectionResponse, FrameRequest,
                      _per_replica_counts)
 from .faults import ShardFaultCursor
+from .models import cascade_report_keys
 
 _INF = float("inf")
 
@@ -96,6 +97,11 @@ class _DetectionCore:
         self._seq_of: Dict[int, int] = {}
         self._epoch_reports: List[Dict] = []
         self._all_frames: List[FrameRequest] = []
+        # micro-batch numbering is monotone across SEGMENTS (not reset
+        # at epoch boundaries): the audit's switch-at-batch-boundary
+        # rule keys model_switch events on (shard, batch), which must
+        # never repeat within one trace
+        self._batch_no = 0
         self._new_segment()
 
     def _new_segment(self):
@@ -103,11 +109,16 @@ class _DetectionCore:
         self._qi = 0
         self._responses: List[DetectionResponse] = []
         self._dropped: List[FrameRequest] = []
-        self._batch_no = 0
         # warm-start stream set of THIS segment: every stream with a seq
         # floor appears in the segment report even with zero frames
         self._seg_warm = set(self._seq_next)
         self._fc0 = self.eng.scheduler.fault_counts()
+        # per-segment transprecise-cascade counters (summed back
+        # together by the shard/epoch merges via cascade_report_keys)
+        self._model_counts: Dict[str, int] = {}
+        self._model_of: Dict[int, str] = {}
+        self._switches = 0
+        self._roi_px = {"full": 0.0, "roi": 0.0, "passes": 0}
 
     # ------------------------------------------------------------ ingest
     def ingest(self, frames):
@@ -157,6 +168,26 @@ class _DetectionCore:
         seq_of = self._seq_of
         chunk = frames[i:i + eng._chunk_size(frames, i)]
         self._qi += len(chunk)
+        model = None
+        if eng.cascade is not None:
+            # transprecise model selection at the batch boundary — the
+            # ONLY point a switch may happen (audited).  The decision is
+            # a pure function of virtual-clock signals (batch formation
+            # time, batch size, committed backlog, healthy-pool caps),
+            # so it replays bit-identically.
+            t_sel = max(chunk[0].t_arrival,
+                        min(r.busy_until for r in eng.replicas))
+            model, switched = eng.cascade.decide(
+                t_sel, len(chunk), eng.scheduler.backlog(t_sel),
+                eng._model_caps())
+            if switched:
+                self._switches += 1
+                if rec.enabled:
+                    rec.record("model_switch", t_sel, batch=self._batch_no,
+                               model=model)
+            # pin service estimates BEFORE the drop-assign loop: drop
+            # decisions must price frames at the selected model's rate
+            eng._apply_model(model)
         if rec.enabled:
             if self._batch_no % 4 == 0:
                 # queue depth + residual backlog sampled at the moment a
@@ -202,12 +233,39 @@ class _DetectionCore:
             pad = np.zeros((b - len(kept),) + images.shape[1:],
                            images.dtype)
             images = np.concatenate([images, pad], 0)
+        # no catalog => no `model=` kwarg: the plain-engine call keeps
+        # the pre-cascade `_detect_batch` signature contract
+        mkw = {} if model is None else {"model": model}
         (boxes, scores, classes, valid), wall = eng._detect_batch(
-            images, rids=[f.rid for f in kept] + [-1] * (b - len(kept)))
+            images, rids=[f.rid for f in kept] + [-1] * (b - len(kept)),
+            **mkw)
+        roi_frac = 0.0
+        if (model is not None and eng.roi
+                and model != eng.cascade.heaviest):
+            # hierarchical second pass: the light model's boxes become
+            # ROI windows batched through the heavy model
+            (boxes, scores, classes, valid), roi_frac, roi_wall = \
+                self._roi_pass(kept, images, b, model,
+                               (boxes, scores, classes, valid), rec)
+            wall += roi_wall
         per_frame = (wall / len(kept) if eng.service_time is None
                      else eng.service_time)
+        roi_cost = 0.0
+        if model is not None:
+            prof = eng.catalog.get(model)
+            if prof is not None and prof.service_s is not None:
+                # virtual cost: the selected model's pinned service plus
+                # the second pass priced at the pixel fraction actually
+                # read of the heavy model's full-frame service
+                heavy_s = eng.catalog[eng.cascade.heaviest].service_s
+                roi_cost = roi_frac * (heavy_s or 0.0)
+                per_frame = prof.service_s + roi_cost
         for r in eng.replicas:
             r._last_wall = per_frame
+        if model is not None:
+            # re-pin from each replica's own catalog (heterogeneous
+            # per-replica profiles override the pool-wide estimate)
+            eng._apply_model(model, roi_cost)
         if not eng.drop_when_busy:
             # blocking mode assigns after the measurement, so this
             # batch's own wall time drives its virtual-clock slots.
@@ -235,6 +293,118 @@ class _DetectionCore:
                 f.rid, boxes[j], scores[j], classes[j], valid[j],
                 a.executor_idx, a.t_start, a.t_done, per_frame,
                 stream_id=f.stream_id, seq=seq_of[f.rid]))
+            if model is not None:
+                self._model_of[f.rid] = model
+                self._model_counts[model] = \
+                    self._model_counts.get(model, 0) + 1
+
+    def _roi_pass(self, kept, images, b, model, first, rec):
+        """Hierarchical second pass over one micro-batch: the selected
+        light model's detections become ROI windows (top ``roi_max``
+        by score, padded, clamped), the heavy model answers only inside
+        them, and its detections — clipped to their covering window —
+        REPLACE the first pass's output.  Returns the replacement
+        ``(boxes, scores, classes, valid)``, the fraction of full-frame
+        pixels the second pass read, and its measured wall seconds.
+
+        The crop always runs through the ``kernels.roi`` pair (Pallas /
+        XLA twin per the engine's ``use_pallas``), so the serving hot
+        path exercises the kernel tier; with a built-in SSD the crops
+        are detected directly, with a cascade oracle the ROI windows
+        are forwarded for the oracle's containment filter."""
+        import time as _time
+        from ..kernels import ops as _kops
+        from .cascade import roi_pixels, rois_from_boxes
+        eng = self.eng
+        boxes, scores, classes, valid = first
+        heavy = eng.cascade.heaviest
+        n = len(kept)
+        R = eng.roi_max
+        if eng.roi_bounds is not None:
+            W, H = eng.roi_bounds
+        else:
+            W, H = images.shape[2], images.shape[1]
+        rois = np.zeros((n, R, 4), np.float32)
+        n_rois = np.zeros(n, np.int64)
+        px = np.zeros(n)
+        for j in range(n):
+            rois[j], n_rois[j] = rois_from_boxes(
+                boxes[j], scores[j], valid[j], bounds=(W, H),
+                roi_max=R, pad=eng.roi_pad)
+            px[j] = roi_pixels(rois[j], int(n_rois[j]), (W, H))
+        px_full = float(n) * W * H
+        px_roi = float(px.sum())
+        t0 = _time.perf_counter()
+        C = eng.roi_crop or images.shape[1]
+        norm = rois / np.array([W, H, W, H], np.float32)
+        crops = _kops.crop_resize(images[:n], norm, out_size=C,
+                                  use_pallas=eng._use_pallas)
+        if eng._detect_fn is not None:
+            roi_arg = {f.rid: rois[j][:n_rois[j]]
+                       for j, f in enumerate(kept)}
+            out2, _ = eng._detect_batch(
+                images, rids=[f.rid for f in kept] + [-1] * (b - n),
+                model=heavy, rois=roi_arg)
+            boxes, scores, classes, valid = out2
+        else:
+            # built-in SSD: detect the crop tiles, map boxes back into
+            # the parent frame, keep the top detections per frame
+            flat = np.asarray(crops).reshape((n * R,) + crops.shape[2:])
+            bb = eng._bucket(n * R)
+            if len(flat) < bb:
+                flat = np.concatenate(
+                    [flat, np.zeros((bb - len(flat),) + flat.shape[1:],
+                                    flat.dtype)], 0)
+            out2, _ = eng._detect_batch(flat)
+            cb, cs, cc, cv = out2
+            M = cb.shape[1]
+            cb = np.asarray(_kops.uncrop_boxes(
+                cb[:n * R].reshape(n, R, M, 4), norm[:, :, None, :],
+                bounds=(W, H), crop_size=C,
+                use_pallas=eng._use_pallas))
+            cs = cs[:n * R].reshape(n, R, M)
+            cc = cc[:n * R].reshape(n, R, M)
+            cv = (cv[:n * R].reshape(n, R, M)
+                  & (np.arange(R)[None, :, None] < n_rois[:, None, None]))
+            K = boxes.shape[1]
+            # jitted outputs can be read-only views — replace in copies
+            boxes, scores = boxes.copy(), scores.copy()
+            classes, valid = classes.copy(), valid.copy()
+            for j in range(n):
+                fb = cb[j].reshape(-1, 4)
+                fs = np.where(cv[j].reshape(-1), cs[j].reshape(-1),
+                              -np.inf)
+                top = np.argsort(-fs, kind="stable")[:K]
+                keep = top[np.isfinite(fs[top])]
+                boxes[j] = 0.0
+                scores[j] = 0.0
+                classes[j] = 0
+                valid[j] = False
+                boxes[j, :len(keep)] = fb[keep]
+                scores[j, :len(keep)] = fs[keep]
+                classes[j, :len(keep)] = cc[j].reshape(-1)[keep]
+                valid[j, :len(keep)] = True
+        roi_wall = _time.perf_counter() - t0
+        self._roi_px["full"] += px_full
+        self._roi_px["roi"] += px_roi
+        self._roi_px["passes"] += n
+        if rec.enabled:
+            for j, f in enumerate(kept):
+                v = np.asarray(valid[j], bool)
+                fb = np.asarray(boxes[j])[v]
+                ext = ([float(fb[:, 0].min()), float(fb[:, 1].min()),
+                        float(fb[:, 2].max()), float(fb[:, 3].max())]
+                       if len(fb) else None)
+                rec.record(
+                    "roi_pass", f.t_arrival, rid=f.rid,
+                    stream=f.stream_id, model=heavy,
+                    n_rois=int(n_rois[j]), px_full=float(W) * float(H),
+                    px_roi=float(px[j]),
+                    rois=[[float(x) for x in row]
+                          for row in rois[j][:n_rois[j]]],
+                    bounds=[float(W), float(H)], det_extent=ext)
+        return (boxes, scores, classes, valid), \
+            (px_roi / px_full if px_full else 0.0), roi_wall
 
     # ---------------------------------------------------------- finalize
     def _finalize_segment(self, *, record: bool = True) -> Dict:
@@ -319,6 +489,15 @@ class _DetectionCore:
             "retries": fault_counts["retries"],
             "failovers": fault_counts["failovers"],
             "frames_lost": fault_counts["frames_lost"],
+            # transprecise-cascade block (serving.models): raw counters
+            # through the SAME derivation the shard merges recompute
+            # with, so single-shard merges stay bit-identical.  All
+            # keys present (empty) without a catalog.
+            **cascade_report_keys(
+                self._model_counts, self._model_of,
+                (eng.catalog.map_est_by_name()
+                 if eng.catalog is not None else {}),
+                self._switches, self._roi_px, len(frames)),
             # latency distribution block (repro.obs.metrics): exact p50
             # plus histogram-derived p95/p99 and mergeable rollups
             **detection_latency_keys(

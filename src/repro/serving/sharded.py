@@ -46,6 +46,7 @@ from ..obs.trace import NULL_RECORDER
 from ..sharding.context import mesh_context
 from ..sharding.serving_rules import constrain_detections, constrain_frames
 from .engine import DetectionEngine, FrameRequest
+from .models import cascade_report_keys
 
 
 def make_spmd_detect(cfg, params, mesh, *, score_thr: float = 0.4,
@@ -203,6 +204,33 @@ def _epoch_rollup(reports: Sequence[Dict]) -> Dict:
     }
 
 
+def _merged_cascade_keys(reports: Sequence[Dict], n_frames: int) -> Dict:
+    """Merge the transprecise-cascade block: raw counters sum (model
+    counts, switches, roi pixels) or union (``model_of_frame`` /
+    ``model_map_est`` — rids are globally unique, catalogs agree on
+    names), then the derived scalars (``map_estimate``,
+    ``roi_pixel_reduction``) are RECOMPUTED by the same
+    ``cascade_report_keys`` the engines use — never averaged — so a
+    single-shard merge is bit-identical to the shard's own report."""
+    counts: Dict[str, int] = {}
+    model_of: Dict[int, str] = {}
+    map_est: Dict[str, float] = {}
+    switches = 0
+    roi_px = {"full": 0.0, "roi": 0.0, "passes": 0}
+    for rep in reports:
+        for m, c in rep.get("models", {}).items():
+            counts[m] = counts.get(m, 0) + c
+        model_of.update(rep.get("model_of_frame", {}))
+        map_est.update(rep.get("model_map_est", {}))
+        switches += rep.get("model_switches", 0)
+        rp = rep.get("roi_pixels", {})
+        roi_px["full"] += rp.get("full", 0.0)
+        roi_px["roi"] += rp.get("roi", 0.0)
+        roi_px["passes"] += rp.get("passes", 0)
+    return cascade_report_keys(counts, model_of, map_est, switches,
+                               roi_px, n_frames)
+
+
 def merge_shard_reports(frames: Sequence[FrameRequest],
                         reports: Sequence[Dict],
                         pool_sizes: Sequence[int]) -> Dict:
@@ -263,6 +291,7 @@ def merge_shard_reports(frames: Sequence[FrameRequest],
         **_merged_fault_counts(reports, range(len(reports)), pool_sizes),
         **_merged_latency_keys(responses, reports, range(len(reports)),
                                pool_sizes),
+        **_merged_cascade_keys(reports, len(frames)),
         "per_epoch": {0: _epoch_rollup(reports)},
         "n_shards": len(reports),
         "per_shard": [{
@@ -365,6 +394,7 @@ def merge_epoch_shard_reports(frames: Sequence[FrameRequest],
         **_merged_fault_counts(reports, report_shard, pool_sizes),
         **_merged_latency_keys(responses, reports, report_shard,
                                pool_sizes),
+        **_merged_cascade_keys(reports, len(frames)),
         "per_epoch": {
             e: _epoch_rollup([rep for rep, re_ in zip(reports, epochs_of)
                               if re_ == e])
