@@ -54,9 +54,9 @@ def main():
         "hetero_models": tables.hetero_models,     # beyond-paper (§V)
     }
     names = (args.only.split(",") if args.only else
-             list(benches) + ["kernels", "nms", "tracking", "nvr",
-                              "sharded", "faults", "obs", "daemon",
-                              "cascade", "roofline"])
+             list(benches) + ["kernels", "nms", "tracking", "tick",
+                              "nvr", "sharded", "faults", "obs",
+                              "daemon", "cascade", "roofline"])
 
     print("name,us_per_call,derived")
     for name in names:
@@ -94,6 +94,22 @@ def main():
               f"map_tracked={row['map_tracked']:.4f} "
               f"coverage={row['coverage']:.3f} "
               f"id_switches={row['id_switches']:.0f}")
+
+    if "tick" in names:
+        # the tick-pipeline launch chain: staged step+output vs the
+        # one-launch-per-window scan (derived = window speedup; the
+        # >= 1.2x gate and bit-identity run in tick_bench.py's main)
+        from benchmarks.tick_bench import bench as bench_tick
+        from repro.tracking import TrackerConfig
+        r = bench_tick(B=2, D=8, K=20, reps=3,
+                       cfg=TrackerConfig(capacity=16))
+        print(f"tick_fused_window,"
+              f"{r['fused_window']['tracker_step_ms']*1e3:.0f},"
+              f"{r['speedup']:.2f}")
+        print(f"# tick: staged={r['staged']['tracker_step_ms']:.3f}ms "
+              f"fused={r['fused']['tracker_step_ms']:.3f}ms "
+              f"window={r['fused_window']['tracker_step_ms']:.3f}ms "
+              f"identical={r['bit_identical']}")
 
     if "nvr" in names:
         # multi-camera serving: 8 cameras multiplexed onto a 2-replica

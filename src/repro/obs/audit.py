@@ -38,6 +38,16 @@ a recorded event list and verifies:
    frame, and the second pass's detections (``det_extent``) must land
    inside the frame — a cropped re-detection can never escape the
    image it came from.
+7. **Track-identity continuity** — track identities must survive
+   segment boundaries and shard migration.  Every tracker segment
+   records a ``track_export`` per stream (its ``next_id`` counter +
+   confirmed track-id set) and, when seeded from carried rows, a
+   matching ``track_import``.  An import must reproduce the stream's
+   latest prior export exactly (same ``next_id``, same ``tids`` — a
+   fresh table restarting ids at 0 can never fake it), and a stream
+   that keeps emitting after a ``migrate`` without importing its
+   exported table was re-seeded: a violation.  Traces from engines
+   that never ran a tracker carry no export events and pass vacuously.
 
 ``audit_events`` returns an ``AuditResult`` whose ``violations`` list
 is empty on a clean trace; each violation is a dict with a ``rule``
@@ -71,7 +81,7 @@ def _lane(ev: dict) -> Tuple[int, int]:
 
 def audit_events(events: List[dict],
                  max_violations: int = 50) -> AuditResult:
-    """Replay ``events`` (raw recorder order) and check the six
+    """Replay ``events`` (raw recorder order) and check the seven
     invariants in the module docstring.  Events may be passed in any
     order; they are re-sorted by code order ``i`` first."""
     evs = sorted(events, key=lambda e: e["i"])
@@ -97,10 +107,15 @@ def audit_events(events: List[dict],
     loans: Dict[int, List[dict]] = {}               # borrower -> stack
     # -- micro-batches already filling (model switches must precede) ---
     started: set = set()                            # (shard, batch)
+    # -- track-identity continuity -------------------------------------
+    last_export: Dict[int, dict] = {}   # stream -> latest export event
+    # migrated streams whose exported table has not been imported yet:
+    # an emit for one of them means the destination re-seeded
+    pending_migrate: Dict[int, dict] = {}
 
     n = {"arrive": 0, "emit": 0, "interp_emit": 0, "drop": 0,
          "shard_lost": 0, "dispatch": 0, "loan": 0, "model_switch": 0,
-         "roi_pass": 0}
+         "roi_pass": 0, "track_export": 0, "track_import": 0}
 
     for ev in evs:
         kind = ev["kind"]
@@ -131,6 +146,10 @@ def audit_events(events: List[dict],
                     flag("emit_monotonicity", ev, prev_t=pt,
                          why="emit time decreased")
             last_emit[s] = (seq, t)
+            if s in pending_migrate:
+                flag("track_continuity", pending_migrate.pop(s),
+                     why="stream served after migration without "
+                         "importing its exported track table")
         elif kind == "drop":
             n["drop"] += 1
             rid = ev["rid"]
@@ -187,6 +206,29 @@ def audit_events(events: List[dict],
             # health mask: every open mark on that shard closes
             for lane in [ln for ln in dead if ln[0] == ev.get("shard")]:
                 dead.pop(lane)
+        elif kind == "track_export":
+            n["track_export"] += 1
+            last_export[ev["stream"]] = ev
+        elif kind == "track_import":
+            n["track_import"] += 1
+            s = ev["stream"]
+            prev = last_export.get(s)
+            if prev is not None and (
+                    ev.get("next_id") != prev.get("next_id")
+                    or list(ev.get("tids", ())) != list(
+                        prev.get("tids", ()))):
+                flag("track_continuity", ev,
+                     exported={"next_id": prev.get("next_id"),
+                               "tids": list(prev.get("tids", ()))},
+                     why="imported table does not match the stream's "
+                         "latest export")
+            pending_migrate.pop(s, None)
+        elif kind == "migrate":
+            s = ev["stream"]
+            if s in last_export:
+                # the stream owes its next segment an import of this
+                # table; emitting again without one is a re-seed
+                pending_migrate[s] = ev
         elif kind == "loan":
             n["loan"] += 1
             loans.setdefault(ev["borrower"], []).append(ev)

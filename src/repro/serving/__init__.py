@@ -39,6 +39,16 @@ ROI second pass (cheap first-pass boxes -> ``kernels.roi`` crops ->
 heavy model).  A single-entry catalog is bit-identical to the plain
 engine.
 
+Tick pipeline (``repro.serving.pipeline``): the per-tick data plane —
+detect -> decode -> NMS -> [ROI second pass] -> associate -> Kalman —
+as composable stages over one typed ``TickState`` pytree, shared by
+every engine: the chunking helpers, the ROI second pass as a pure
+stage, the portable track-row contract that carries identities across
+epoch boundaries and shard migration, and ``TickPipeline`` — the
+tracker tick driver whose fused mode runs the whole tick as ONE jitted
+program with donated track-table buffers, bit-identical to the staged
+chain.
+
 Incremental core (``repro.serving.runtime``): both batch ``serve()``
 entry points are thin trace-replay drivers over ``ServingRuntime`` —
 an always-on core with ``ingest`` / ``advance`` / ``epoch_boundary`` /
@@ -58,6 +68,7 @@ from .faults import (FaultEvent, FaultSchedule, ReplicaFaultView,
 from .models import (ModelCatalog, ModelProfile, make_cascade_detect_fn,
                      paper_catalog)
 from .nvr import make_nvr_streams, make_skewed_streams
+from .pipeline import TickPipeline, TickState, roi_second_pass
 from .runtime import ServingRuntime
 from .sharded import (ShardedDetectionEngine, make_spmd_detect,
                       merge_epoch_shard_reports, merge_shard_reports)
@@ -68,8 +79,8 @@ __all__ = ["DetectionEngine", "DetectionResponse", "EventBus",
            "ModelCatalog", "ModelProfile", "ModelSelector",
            "ReplicaFaultView", "Request", "Response", "ReplicaExecutor",
            "ServingEngine", "ServingRuntime", "ShardFaultCursor",
-           "ShardedDetectionEngine", "TapRecorder", "Watchdog",
-           "make_cascade_detect_fn", "make_nvr_streams",
-           "make_skewed_streams", "make_spmd_detect",
+           "ShardedDetectionEngine", "TapRecorder", "TickPipeline",
+           "TickState", "Watchdog", "make_cascade_detect_fn",
+           "make_nvr_streams", "make_skewed_streams", "make_spmd_detect",
            "merge_epoch_shard_reports", "merge_shard_reports",
-           "paper_catalog", "topic_of"]
+           "paper_catalog", "roi_second_pass", "topic_of"]

@@ -49,6 +49,7 @@ from ..models.config import ModelConfig
 from ..obs.metrics import detection_latency_keys
 from ..obs.trace import NULL_RECORDER
 from ..runtime.steps import make_decode_step, make_prefill_step
+from .pipeline import TickPipeline, bucket, chunk_size, confirmed_ids
 
 
 @dataclass
@@ -397,6 +398,17 @@ class DetectionEngine:
       ``model_of_frame`` / ``model_map_est`` / ``model_switches`` /
       ``map_estimate`` / ``roi_pixels`` / ``roi_pixel_reduction``
       (present, empty, without a catalog).
+    * Tick pipeline (``serving.pipeline``): the per-tick data plane —
+      detect -> decode -> NMS -> [ROI second pass] -> associate ->
+      Kalman — is composed from shared stages over a ``TickState``
+      pytree.  ``fused_tick=True`` runs the tracker tick as ONE jitted
+      program with donated track-table buffers (bit-identical to the
+      staged chain); ``post_process=`` installs a pure ``TickState ->
+      TickState`` stage between NMS/ROI and the tracker (composes with
+      cascade model selection — the state carries the batch's model);
+      ``carry_tracks=False`` opts out of seeding the tracker from
+      carried portable rows (``serve(stream_tracks=...)``), restoring
+      the re-seed-per-segment behaviour.
     """
 
     def __init__(self, cfg=None, params=None, n_replicas: int = 4,
@@ -413,7 +425,9 @@ class DetectionEngine:
                  timeout_k: float = 4.0, max_retries: int = 1,
                  recorder=None, catalog=None, selector_kw=None,
                  roi: bool = False, roi_bounds=None, roi_max: int = 4,
-                 roi_pad: float = 0.1, roi_crop: Optional[int] = None):
+                 roi_pad: float = 0.1, roi_crop: Optional[int] = None,
+                 fused_tick: bool = False, post_process=None,
+                 carry_tracks: bool = True):
         if n_replicas < 1:
             raise ValueError(f"n_replicas must be >= 1, got {n_replicas}: "
                              "an empty replica pool can never serve")
@@ -478,6 +492,19 @@ class DetectionEngine:
         self.roi_max = roi_max
         self.roi_pad = roi_pad
         self.roi_crop = roi_crop
+        # tick-pipeline knobs (serving.pipeline): ``fused_tick`` runs
+        # the tracker tick as ONE jitted program with donated
+        # track-table buffers (bit-identical to the staged chain);
+        # ``post_process`` is a pure ``TickState -> TickState`` stage
+        # applied after detect/NMS/ROI, before responses and the
+        # tracker (None = identity, bit-identical); ``carry_tracks``
+        # seeds each segment's tracker from the previous segment's
+        # exported rows so identities survive epoch boundaries and
+        # stream migration (False restores the old re-seed behavior).
+        self.fused_tick = bool(fused_tick)
+        self.post_process = post_process
+        self.carry_tracks = bool(carry_tracks)
+        self._exported_tracks: Dict[int, dict] = {}
         self._use_pallas = use_pallas
         # capability probe: does a custom detect_fn accept the cascade's
         # model= / rois= keywords?  A plain oracle keeps its exact
@@ -587,33 +614,27 @@ class DetectionEngine:
     def _chunk_size(self, frames, i: int) -> int:
         """Queue depth at dispatch time: how many frames have arrived by
         the moment the earliest replica frees up (at least one — the
-        head frame defines 'now' when the pipeline is idle)."""
-        if self.micro_batch is not None:
-            return self.micro_batch
-        t_now = max(frames[i].t_arrival,
-                    min(r.busy_until for r in self.replicas))
-        q = 1
-        while (i + q < len(frames) and q < self.max_micro_batch
-               and frames[i + q].t_arrival <= t_now):
-            q += 1
-        return q
+        head frame defines 'now' when the pipeline is idle).  Shared
+        implementation: ``pipeline.chunk_size``."""
+        return chunk_size(frames, i, micro_batch=self.micro_batch,
+                          max_micro_batch=self.max_micro_batch,
+                          replicas=self.replicas)
 
     @staticmethod
     def _bucket(k: int) -> int:
         """Pad adaptive batches to power-of-two buckets: O(log mb) jit
-        traces instead of one per distinct queue depth.
+        traces instead of one per distinct queue depth.  Shared
+        implementation: ``pipeline.bucket``.
 
         >>> [DetectionEngine._bucket(k) for k in (1, 2, 3, 5, 8)]
         [1, 2, 4, 8, 8]
         """
-        b = 1
-        while b < k:
-            b <<= 1
-        return b
+        return bucket(k)
 
     def serve(self, frames: Sequence[FrameRequest], *, reset: bool = True,
               stream_seq0: Optional[Dict[int, int]] = None,
-              stream_emit0: Optional[Dict[int, float]] = None) -> Dict:
+              stream_emit0: Optional[Dict[int, float]] = None,
+              stream_tracks: Optional[Dict[int, dict]] = None) -> Dict:
         """Micro-batched detection serving: frames are grouped in arrival
         order into micro-batches (queue-depth-sized unless a fixed
         ``micro_batch`` was given), each batch runs through the batched
@@ -645,7 +666,14 @@ class DetectionEngine:
           given floor instead of restarting at 0;
         * ``stream_emit0`` maps ``stream_id -> emit-clock floor``:
           tracker-interpolated frames of that stream are never released
-          before it (per-stream emit monotonicity across calls).
+          before it (per-stream emit monotonicity across calls);
+        * ``stream_tracks`` maps ``stream_id -> portable track row``
+          (``tracking.export_rows``; the engine's own exports land in
+          ``_exported_tracks`` after each serve): the lockstep tracker
+          seeds those streams from their carried rows instead of fresh
+          tables, so track identities survive the call boundary —
+          including a ``rebalance_streams`` migration to a different
+          shard's engine.  Ignored when ``carry_tracks=False``.
 
         Report keys: ``responses`` (rid order), ``dropped`` (rids, in
         arrival order), ``coverage`` = responses/frames,
@@ -676,16 +704,21 @@ class DetectionEngine:
         default no-op recorder keeps this path bit-identical."""
         from .runtime import ServingRuntime
         rt = ServingRuntime(self, reset=reset, stream_seq0=stream_seq0,
-                            stream_emit0=stream_emit0)
+                            stream_emit0=stream_emit0,
+                            stream_tracks=stream_tracks)
         rt.ingest(frames)
         return rt.drain()
 
-    def _interpolate(self, frames, responses, seq_of,
-                     emit0) -> List[DetectionResponse]:
+    def _interpolate(self, frames, responses, seq_of, emit0,
+                     tracks0: Optional[Dict[int, dict]] = None,
+                     rec=None) -> List[DetectionResponse]:
         """ONE batched tracker over every camera stream, advanced in
-        lockstep: tick k covers each stream's k-th arrival frame, and
-        the whole (B, T) track table moves with a single ``trk.step``
-        launch per tick.  Streams whose tick-k frame was processed feed
+        lockstep by the shared tick pipeline (``serving.pipeline``):
+        tick k covers each stream's k-th arrival frame, and the whole
+        (B, T) track table moves with a single tracker launch per tick
+        (the staged ``trk.step``/``trk.coast`` chain by default; the
+        one-jit donated-buffer program under ``fused_tick`` —
+        bit-identical).  Streams whose tick-k frame was processed feed
         the associate/update/birth path; streams whose frame was
         dropped — or that have no frame left — are passed an
         all-invalid detection row, which is bit-identical to coasting
@@ -694,8 +727,17 @@ class DetectionEngine:
         the coasted prediction, tagged ``interpolated``, ready no
         earlier than the newest detection of the SAME stream they
         extrapolate from (per-stream emit clocks: one slow camera never
-        delays another's output)."""
-        from .. import tracking as trk
+        delays another's output).
+
+        ``tracks0`` seeds streams from carried portable rows (see
+        ``serve``'s ``stream_tracks``); the final table is exported per
+        stream into ``self._exported_tracks`` either way.  With a
+        ``rec`` attached, seeding records a ``track_import`` per
+        carried stream, the export records a ``track_export`` per
+        stream (both carrying ``next_id`` + confirmed ``tids`` — the
+        identity-continuity audit's evidence), and one ``stage`` timing
+        event covers the whole tracker chain."""
+        rec = NULL_RECORDER if rec is None else rec
         cfg = self.tracker_cfg
         per: Dict[int, List[FrameRequest]] = {}
         for f in frames:                    # frames sorted by arrival
@@ -703,7 +745,16 @@ class DetectionEngine:
         sids = sorted(per)
         row = {s: b for b, s in enumerate(sids)}
         B = len(sids)
-        state = trk.init_state(B, cfg)
+        pipe = TickPipeline(cfg, fused=self.fused_tick)
+        rows0 = dict(tracks0) if (self.carry_tracks and tracks0) else {}
+        state = pipe.seed(sids, rows0)
+        if rec.enabled:
+            for s in sids:
+                r0 = rows0.get(s)
+                if r0 is not None:
+                    rec.record("track_import", per[s][0].t_arrival,
+                               stream=s, next_id=int(r0["next_id"]),
+                               tids=confirmed_ids(r0, cfg))
         by_rid = {r.rid: r for r in responses}
         D = responses[0].boxes.shape[0] if responses else 1
         # warm-start emit floor: when this call continues a sliced trace
@@ -711,7 +762,7 @@ class DetectionEngine:
         # before anything the PREVIOUS call already emitted for it
         emit_t = {s: emit0.get(s, 0.0) for s in sids}
         ticks = max(len(v) for v in per.values())
-        launches = 0
+        wall0 = time.perf_counter()
         out: List[DetectionResponse] = []
         for k in range(ticks):
             tick = [(s, per[s][k] if k < len(per[s]) else None)
@@ -729,14 +780,14 @@ class DetectionEngine:
                         b = row[s]
                         boxes[b], scores[b] = r.boxes, r.scores
                         classes[b], valid[b] = r.classes, r.valid
-                state, det_tid = trk.step(
-                    state, jnp.asarray(boxes), jnp.asarray(scores),
-                    jnp.asarray(classes), jnp.asarray(valid), cfg)
-                det_tid = np.asarray(det_tid)
+                state, det_tid, fout = pipe.tick(state, boxes, scores,
+                                                 classes, valid)
             else:                           # no stream saw a detection
-                state = trk.coast(state, cfg)
-            launches += 1
-            coasted = None                  # lazy: only if a drop needs it
+                state, fout = pipe.coast(state, det_width=D)
+            # fused mode returns the tick's output for free; the staged
+            # chain materializes it lazily, only if a drop needs it
+            coasted = (tuple(np.asarray(a) for a in fout)
+                       if fout is not None else None)
             for s, f in tick:
                 if f is None:
                     continue
@@ -748,13 +799,24 @@ class DetectionEngine:
                 else:
                     if coasted is None:
                         coasted = tuple(np.asarray(a) for a in
-                                        trk.output(state, cfg))
+                                        pipe.output(state))
                     tb, ts, tc, tid, emit = coasted
                     t_ready = max(emit_t[s], f.t_arrival)
                     out.append(DetectionResponse(
                         f.rid, tb[b], ts[b], tc[b], emit[b], -1, t_ready,
                         t_ready, 0.0, interpolated=True,
                         track_ids=tid[b], stream_id=s, seq=seq_of[f.rid]))
-        self._tracker_launches = launches
+        self._tracker_launches = pipe.launches
         self._tracker_ticks = ticks
+        self._exported_tracks = pipe.export(state, sids)
+        if rec.enabled:
+            for s in sids:
+                rowd = self._exported_tracks[s]
+                rec.record("track_export", per[s][-1].t_arrival,
+                           stream=s, next_id=int(rowd["next_id"]),
+                           tids=confirmed_ids(rowd, cfg))
+            rec.record("stage", frames[-1].t_arrival, stage="track",
+                       launches=pipe.launches, ticks=ticks)
+            rec.sample("stage_ms_track", frames[-1].t_arrival,
+                       (time.perf_counter() - wall0) * 1e3)
         return out

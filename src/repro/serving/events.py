@@ -46,6 +46,7 @@ _TOPIC_OF_KIND = {
     "interp_emit": "detection",
     "drop": "drop", "shard_lost": "drop", "lost": "drop",
     "migrate": "migration",
+    "track_export": "migration", "track_import": "migration",
     "retry": "fault", "failover": "fault", "health_mark": "fault",
     "health_restore": "fault", "shard_down": "fault",
     "shard_restart": "fault",

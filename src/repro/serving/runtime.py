@@ -64,14 +64,10 @@ from .engine import (DetectionEngine, DetectionResponse, FrameRequest,
                      _per_replica_counts)
 from .faults import ShardFaultCursor
 from .models import cascade_report_keys
+from .pipeline import TickState, roi_second_pass
+from .pipeline import sorted_chunk as _sorted_chunk
 
 _INF = float("inf")
-
-
-def _sorted_chunk(frames) -> List[FrameRequest]:
-    if isinstance(frames, FrameRequest):
-        return [frames]
-    return sorted(frames, key=lambda f: f.t_arrival)
 
 
 class _DetectionCore:
@@ -85,7 +81,8 @@ class _DetectionCore:
 
     def __init__(self, eng: DetectionEngine, *, reset: bool = True,
                  stream_seq0: Optional[Dict[int, int]] = None,
-                 stream_emit0: Optional[Dict[int, float]] = None):
+                 stream_emit0: Optional[Dict[int, float]] = None,
+                 stream_tracks: Optional[Dict[int, dict]] = None):
         self.eng = eng
         if not eng._warm:
             eng.warmup()
@@ -94,6 +91,12 @@ class _DetectionCore:
         self._watermark = -_INF
         self._seq_next: Dict[int, int] = dict(stream_seq0 or {})
         self._emit0: Dict[int, float] = dict(stream_emit0 or {})
+        # portable track rows carried across segments (and, via the
+        # epoch core, across shard migration): stream_id -> row dict
+        # from ``tracking.export_rows``.  Seeds the interpolation
+        # tracker of every NEXT segment so track identities persist
+        # instead of re-seeding at epoch boundaries.
+        self._tracks0: Dict[int, dict] = dict(stream_tracks or {})
         self._seq_of: Dict[int, int] = {}
         self._epoch_reports: List[Dict] = []
         self._all_frames: List[FrameRequest] = []
@@ -203,6 +206,7 @@ class _DetectionCore:
             for f in chunk:
                 rec_enq("enqueue", f.t_arrival, rid=f.rid,
                         stream=f.stream_id, batch=self._batch_no)
+        bno = self._batch_no
         self._batch_no += 1
         kept, assigns = [], []
         if eng.drop_when_busy:
@@ -239,15 +243,32 @@ class _DetectionCore:
         (boxes, scores, classes, valid), wall = eng._detect_batch(
             images, rids=[f.rid for f in kept] + [-1] * (b - len(kept)),
             **mkw)
+        if rec.enabled:
+            # deterministic stage event + wall timing as a sampled
+            # series (events must stay bit-identical across replays)
+            rec.record("stage", chunk[0].t_arrival, stage="detect",
+                       batch=bno, frames=len(kept))
+            rec.sample("stage_ms_detect", chunk[0].t_arrival,
+                       wall * 1e3)
+        # from here the batch travels as a TickState through the shared
+        # stage pipeline: [ROI second pass] -> post-processor hook
+        tick = TickState(boxes=boxes, scores=scores, classes=classes,
+                         valid=valid, images=images, model=model)
         roi_frac = 0.0
         if (model is not None and eng.roi
                 and model != eng.cascade.heaviest):
             # hierarchical second pass: the light model's boxes become
             # ROI windows batched through the heavy model
-            (boxes, scores, classes, valid), roi_frac, roi_wall = \
-                self._roi_pass(kept, images, b, model,
-                               (boxes, scores, classes, valid), rec)
+            tick, roi_frac, roi_wall, px = roi_second_pass(
+                eng, tick, kept, b, rec)
+            self._roi_px["full"] += px["full"]
+            self._roi_px["roi"] += px["roi"]
+            self._roi_px["passes"] += px["passes"]
             wall += roi_wall
+        if eng.post_process is not None:
+            tick = eng.post_process(tick)
+        boxes, scores, classes, valid = (tick.boxes, tick.scores,
+                                         tick.classes, tick.valid)
         per_frame = (wall / len(kept) if eng.service_time is None
                      else eng.service_time)
         roi_cost = 0.0
@@ -298,114 +319,6 @@ class _DetectionCore:
                 self._model_counts[model] = \
                     self._model_counts.get(model, 0) + 1
 
-    def _roi_pass(self, kept, images, b, model, first, rec):
-        """Hierarchical second pass over one micro-batch: the selected
-        light model's detections become ROI windows (top ``roi_max``
-        by score, padded, clamped), the heavy model answers only inside
-        them, and its detections — clipped to their covering window —
-        REPLACE the first pass's output.  Returns the replacement
-        ``(boxes, scores, classes, valid)``, the fraction of full-frame
-        pixels the second pass read, and its measured wall seconds.
-
-        The crop always runs through the ``kernels.roi`` pair (Pallas /
-        XLA twin per the engine's ``use_pallas``), so the serving hot
-        path exercises the kernel tier; with a built-in SSD the crops
-        are detected directly, with a cascade oracle the ROI windows
-        are forwarded for the oracle's containment filter."""
-        import time as _time
-        from ..kernels import ops as _kops
-        from .cascade import roi_pixels, rois_from_boxes
-        eng = self.eng
-        boxes, scores, classes, valid = first
-        heavy = eng.cascade.heaviest
-        n = len(kept)
-        R = eng.roi_max
-        if eng.roi_bounds is not None:
-            W, H = eng.roi_bounds
-        else:
-            W, H = images.shape[2], images.shape[1]
-        rois = np.zeros((n, R, 4), np.float32)
-        n_rois = np.zeros(n, np.int64)
-        px = np.zeros(n)
-        for j in range(n):
-            rois[j], n_rois[j] = rois_from_boxes(
-                boxes[j], scores[j], valid[j], bounds=(W, H),
-                roi_max=R, pad=eng.roi_pad)
-            px[j] = roi_pixels(rois[j], int(n_rois[j]), (W, H))
-        px_full = float(n) * W * H
-        px_roi = float(px.sum())
-        t0 = _time.perf_counter()
-        C = eng.roi_crop or images.shape[1]
-        norm = rois / np.array([W, H, W, H], np.float32)
-        crops = _kops.crop_resize(images[:n], norm, out_size=C,
-                                  use_pallas=eng._use_pallas)
-        if eng._detect_fn is not None:
-            roi_arg = {f.rid: rois[j][:n_rois[j]]
-                       for j, f in enumerate(kept)}
-            out2, _ = eng._detect_batch(
-                images, rids=[f.rid for f in kept] + [-1] * (b - n),
-                model=heavy, rois=roi_arg)
-            boxes, scores, classes, valid = out2
-        else:
-            # built-in SSD: detect the crop tiles, map boxes back into
-            # the parent frame, keep the top detections per frame
-            flat = np.asarray(crops).reshape((n * R,) + crops.shape[2:])
-            bb = eng._bucket(n * R)
-            if len(flat) < bb:
-                flat = np.concatenate(
-                    [flat, np.zeros((bb - len(flat),) + flat.shape[1:],
-                                    flat.dtype)], 0)
-            out2, _ = eng._detect_batch(flat)
-            cb, cs, cc, cv = out2
-            M = cb.shape[1]
-            cb = np.asarray(_kops.uncrop_boxes(
-                cb[:n * R].reshape(n, R, M, 4), norm[:, :, None, :],
-                bounds=(W, H), crop_size=C,
-                use_pallas=eng._use_pallas))
-            cs = cs[:n * R].reshape(n, R, M)
-            cc = cc[:n * R].reshape(n, R, M)
-            cv = (cv[:n * R].reshape(n, R, M)
-                  & (np.arange(R)[None, :, None] < n_rois[:, None, None]))
-            K = boxes.shape[1]
-            # jitted outputs can be read-only views — replace in copies
-            boxes, scores = boxes.copy(), scores.copy()
-            classes, valid = classes.copy(), valid.copy()
-            for j in range(n):
-                fb = cb[j].reshape(-1, 4)
-                fs = np.where(cv[j].reshape(-1), cs[j].reshape(-1),
-                              -np.inf)
-                top = np.argsort(-fs, kind="stable")[:K]
-                keep = top[np.isfinite(fs[top])]
-                boxes[j] = 0.0
-                scores[j] = 0.0
-                classes[j] = 0
-                valid[j] = False
-                boxes[j, :len(keep)] = fb[keep]
-                scores[j, :len(keep)] = fs[keep]
-                classes[j, :len(keep)] = cc[j].reshape(-1)[keep]
-                valid[j, :len(keep)] = True
-        roi_wall = _time.perf_counter() - t0
-        self._roi_px["full"] += px_full
-        self._roi_px["roi"] += px_roi
-        self._roi_px["passes"] += n
-        if rec.enabled:
-            for j, f in enumerate(kept):
-                v = np.asarray(valid[j], bool)
-                fb = np.asarray(boxes[j])[v]
-                ext = ([float(fb[:, 0].min()), float(fb[:, 1].min()),
-                        float(fb[:, 2].max()), float(fb[:, 3].max())]
-                       if len(fb) else None)
-                rec.record(
-                    "roi_pass", f.t_arrival, rid=f.rid,
-                    stream=f.stream_id, model=heavy,
-                    n_rois=int(n_rois[j]), px_full=float(W) * float(H),
-                    px_roi=float(px[j]),
-                    rois=[[float(x) for x in row]
-                          for row in rois[j][:n_rois[j]]],
-                    bounds=[float(W), float(H)], det_extent=ext)
-        return (boxes, scores, classes, valid), \
-            (px_roi / px_full if px_full else 0.0), roi_wall
-
     # ---------------------------------------------------------- finalize
     def _finalize_segment(self, *, record: bool = True) -> Dict:
         """The tail of the batch ``serve``: tracker interpolation,
@@ -427,9 +340,15 @@ class _DetectionCore:
                 n_frames_stream.get(f.stream_id, 0) + 1
         interpolated = 0
         eng._tracker_launches = eng._tracker_ticks = 0
+        # clear stale exports up front: a segment that never runs the
+        # tracker (no frames processed) must not re-offer the PREVIOUS
+        # segment's table at the next boundary — the epoch core's
+        # _tracks0 already holds it
+        eng._exported_tracks = {}
         if eng.track_and_interpolate and (dropped or responses):
             responses = eng._interpolate(frames, responses, seq_of,
-                                         self._emit0)
+                                         self._emit0,
+                                         tracks0=self._tracks0, rec=rec)
             interpolated = sum(r.interpolated for r in responses)
         responses.sort(key=lambda r: r.rid)   # sequence synchronizer
         makespan = max((r.t_done for r in responses), default=0.0)
@@ -517,6 +436,10 @@ class _DetectionCore:
         for sid, em in rep["emit_t"].items():
             if em:
                 self._emit0[sid] = max(self._emit0.get(sid, 0.0), em[-1])
+        if self.eng.carry_tracks:
+            # track identities persist across the boundary: the closed
+            # segment's exported rows seed the next segment's tracker
+            self._tracks0.update(self.eng._exported_tracks)
         self._new_segment()
         return rep
 
@@ -725,6 +648,10 @@ class _ShardedEpochCore:
                           if streams is not None else None)
         self._seq0: Dict[int, int] = {}
         self._emit0: Dict[int, float] = {}
+        # portable track rows by stream_id, updated after every shard
+        # serve: migration hands a stream's row to its NEW shard, so
+        # track identities survive rebalancing and evacuation
+        self._tracks0: Dict[int, dict] = {}
         self._reports: List[Dict] = []
         self._report_shard: List[int] = []
         self._report_epoch: List[int] = []
@@ -824,7 +751,10 @@ class _ShardedEpochCore:
                             stream_seq0=warm,
                             stream_emit0={sid: emit0[sid]
                                           for sid in warm
-                                          if sid in emit0})
+                                          if sid in emit0},
+                            stream_tracks={sid: self._tracks0[sid]
+                                           for sid in warm
+                                           if sid in self._tracks0})
             self._reports.append(rep)
             self._report_shard.append(h)
             self._report_epoch.append(raw_e)
@@ -859,6 +789,11 @@ class _ShardedEpochCore:
             for sid, em in rep["emit_t"].items():
                 if em:
                     emit0[sid] = max(emit0.get(sid, 0.0), em[-1])
+            if eng.carry_tracks:
+                # pull the served streams' track rows back into the
+                # epoch-level map — the rows a migrated stream carries
+                # to its destination shard next window
+                self._tracks0.update(eng._exported_tracks)
             self._lost += lost_h
         self._first_served = True
         self._last_raw = raw_e
@@ -1025,8 +960,11 @@ class ServingRuntime:
     needs the stream universe declared up front (``streams=``); without
     it ingest buffers and ``drain()`` replays the batch path.  The
     warm-start hooks (``reset=False`` / ``stream_seq0`` /
-    ``stream_emit0``) are single-engine trace-slicing plumbing and are
-    rejected on sharded engines.
+    ``stream_emit0`` / ``stream_tracks``) are single-engine
+    trace-slicing plumbing and are rejected on sharded engines — the
+    sharded cores manage their own epoch floors and carry each
+    stream's portable track rows across windows (and migrations)
+    themselves.
 
     **Reset semantics:** :meth:`reset_engines` is THE one definition of
     per-serve state reset (replica virtual clocks + scheduler round
@@ -1039,6 +977,7 @@ class ServingRuntime:
     def __init__(self, engine, *, reset: bool = True,
                  stream_seq0: Optional[Dict[int, int]] = None,
                  stream_emit0: Optional[Dict[int, float]] = None,
+                 stream_tracks: Optional[Dict[int, dict]] = None,
                  streams: Optional[Sequence[int]] = None):
         self.engine = engine
         if isinstance(engine, DetectionEngine):
@@ -1049,14 +988,15 @@ class ServingRuntime:
                 stream_seq0 = {sid: 0 for sid in streams}
             self._core = _DetectionCore(engine, reset=reset,
                                         stream_seq0=stream_seq0,
-                                        stream_emit0=stream_emit0)
+                                        stream_emit0=stream_emit0,
+                                        stream_tracks=stream_tracks)
         elif hasattr(engine, "engines"):     # ShardedDetectionEngine
-            if not reset or stream_seq0 or stream_emit0:
+            if not reset or stream_seq0 or stream_emit0 or stream_tracks:
                 raise ValueError(
                     "warm-start hooks (reset=False / stream_seq0 / "
-                    "stream_emit0) are single-engine trace-slicing "
-                    "plumbing; the sharded cores manage their own "
-                    "epoch floors")
+                    "stream_emit0 / stream_tracks) are single-engine "
+                    "trace-slicing plumbing; the sharded cores manage "
+                    "their own epoch floors and track rows")
             if engine.rebalance and engine.n_shards > 1:
                 self._core = _ShardedEpochCore(engine, streams=streams)
             else:

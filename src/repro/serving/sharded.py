@@ -438,14 +438,13 @@ class ShardedDetectionEngine:
     without coordinating — migrates up to ``max_moves_per_epoch`` whole
     camera streams from the most pressured shard to the least pressured
     one.  Migration happens ONLY at epoch boundaries: within an epoch
-    no tracker state moves; at the boundary every shard's lockstep
-    tracker re-seeds from the new epoch's first detections (trackers
-    are per-``serve`` state, and the epoch loop serves each shard once
-    per epoch), while a migrated stream's per-stream ``seq`` and emit
-    clock carry to its new shard through the engines' warm-start
-    ``stream_seq0`` / ``stream_emit0`` floors — so per-stream ordering
-    and emit monotonicity survive migration, and nothing is silently
-    reset mid-epoch.  ``rebalance=False`` (the default) and
+    no tracker state moves; at the boundary every stream's portable
+    track rows (``tracking.export_rows``, handed between shards through
+    the engines' ``stream_tracks`` warm start) and its per-stream
+    ``seq`` and emit clock all carry to its new shard alongside the
+    ``stream_seq0`` / ``stream_emit0`` floors — so track identities,
+    per-stream ordering and emit monotonicity survive migration, and
+    nothing is silently reset mid-epoch.  ``rebalance=False`` (the default) and
     ``n_shards=1`` (no peer to steal from) keep the static single-pass
     path, bit-identical to the pre-stealing engine.
 

@@ -37,8 +37,9 @@ via ``evaluate_map_dets``, ID switches / continuity via
 ``serving.DetectionEngine(track_and_interpolate=True)``.
 """
 from .interpolate import TrackedFrame, fill_stream
-from .tracker import (TrackerConfig, TrackerState, coast, init_state,
-                      output, step)
+from .tracker import (TrackerConfig, TrackerState, coast, export_rows,
+                      init_state, output, rows_to_state, step)
 
 __all__ = ["TrackedFrame", "TrackerConfig", "TrackerState", "coast",
-           "fill_stream", "init_state", "output", "step"]
+           "export_rows", "fill_stream", "init_state", "output",
+           "rows_to_state", "step"]

@@ -36,6 +36,7 @@ from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from .association import associate, cxcywh_to_xyxy, xyxy_to_cxcywh
 from .kalman import init_cov, kf_predict, kf_update
@@ -195,6 +196,38 @@ def step(state: TrackerState, boxes, scores, classes, valid,
                           cls=cls, track_id=track_id, hits=hits,
                           tsu=tsu, active=active,
                           next_id=next_id), det_tid
+
+
+def export_rows(state: TrackerState) -> list:
+    """Split the (B, T) table into B portable per-stream rows: plain
+    dicts of numpy copies (one entry per ``TrackerState`` field, the
+    batch axis stripped).  Rows are serializable and shard-agnostic —
+    the currency track identities travel in across segment boundaries,
+    stream migration and evacuation.  ``rows_to_state`` rebuilds a
+    table from any subset/reordering of them bit-identically."""
+    arrs = {f: np.asarray(getattr(state, f))
+            for f in TrackerState._fields}
+    B = arrs["active"].shape[0]
+    return [{f: arrs[f][b].copy() for f in TrackerState._fields}
+            for b in range(B)]
+
+
+def rows_to_state(rows, cfg: TrackerConfig) -> TrackerState:
+    """Rebuild a (B, T) table from ``len(rows)`` portable rows; a None
+    entry seeds that batch row fresh (== ``init_state``).  All-None
+    input returns ``init_state`` itself, so a cold start is
+    bit-identical to the pre-portability behavior."""
+    fresh = init_state(len(rows), cfg)
+    if all(r is None for r in rows):
+        return fresh
+    cols = {f: np.asarray(getattr(fresh, f)).copy()
+            for f in TrackerState._fields}
+    for b, r in enumerate(rows):
+        if r is None:
+            continue
+        for f in TrackerState._fields:
+            cols[f][b] = r[f]
+    return TrackerState(**{f: jnp.asarray(v) for f, v in cols.items()})
 
 
 @functools.partial(jax.jit, static_argnames=("cfg",))

@@ -13,6 +13,13 @@ the fixed fixtures the unit tests use:
 * histogram merge never averages: the merged latency quantile is
   recomputed from summed buckets and must equal the quantile of the
   pooled samples' histogram exactly;
+* the fused one-jit tick program produces reports byte-identical to
+  the staged tracker chain, for any trace shape;
+* track identities survive shard migration: a track id born before a
+  ``rebalance_streams`` move re-appears on the destination shard, the
+  ``track_import`` reproduces the source's ``track_export``, and the
+  audit's continuity rule passes — while ``carry_tracks=False``
+  (the old re-seed behaviour) makes the same rule fail;
 * randomized (seeded) fault schedules keep all of the above.
 
 ``hypothesis`` is an optional dev dependency: the ``@given`` variants
@@ -28,7 +35,7 @@ from repro.obs.metrics import (LatencyHistogram, merge_hist_dicts,
                                quantile_of_dict)
 from repro.serving import (DetectionEngine, FaultSchedule, FrameRequest,
                            ServingRuntime, ShardedDetectionEngine,
-                           make_nvr_streams)
+                           make_nvr_streams, make_skewed_streams)
 from test_sharded_serving import assert_reports_identical
 
 try:
@@ -164,6 +171,97 @@ if given is not None:
            n_shards=st.integers(1, 5))
     def test_latency_merge_never_averages_property(lat, n_shards):
         check_merge_never_average(lat, n_shards)
+
+
+# -------------------------------------------- fused tick == staged
+def check_fused_matches_staged(seed: int):
+    """The one-jit donated-buffer tick program must be report-identical
+    to the staged ``trk.step``/``trk.coast`` chain on any trace."""
+    frames, oracle, _, _ = random_trace(seed)
+    rng = np.random.default_rng(2000 + seed)
+    kw = dict(n_replicas=int(rng.integers(1, 4)),
+              service_time=float(rng.uniform(0.1, 0.6)),
+              track_and_interpolate=True,
+              drop_when_busy=bool(rng.integers(2)))
+    staged = DetectionEngine(detect_fn=oracle, **kw).serve(frames)
+    frames2, oracle2, _, _ = random_trace(seed)
+    fused = DetectionEngine(detect_fn=oracle2, fused_tick=True,
+                            **kw).serve(frames2)
+    assert_reports_identical(staged, fused)
+
+
+@pytest.mark.parametrize("seed", SEEDS)
+def test_fused_tick_matches_staged_randomized(seed):
+    check_fused_matches_staged(seed)
+
+
+if given is not None:
+    @settings(max_examples=15, deadline=None)
+    @given(seed=st.integers(0, 10_000))
+    def test_fused_tick_matches_staged_property(seed):
+        check_fused_matches_staged(seed)
+
+
+# --------------------------------- track identity across migration
+def migration_run(carry_tracks: bool):
+    """A skewed 2-shard rebalancing trace with tracker interpolation:
+    guaranteed to migrate stream(s) off the hot shard at epoch 0."""
+    frames, frame_of, videos, dets = make_skewed_streams(
+        6, n_shards=2, n_frames=12, rate=1.0)
+    oracle = proxy_detect_fn_streams(videos, dets, frame_of)
+    rec = TraceRecorder()
+    rep = ShardedDetectionEngine(
+        detect_fn=oracle, n_shards=2, n_replicas=2, service_time=0.36,
+        track_and_interpolate=True, carry_tracks=carry_tracks,
+        rebalance=True, epoch_s=4.0, recorder=rec).serve(frames)
+    return rep, rec
+
+
+def test_track_identity_survives_migration():
+    rep, rec = migration_run(carry_tracks=True)
+    moves = rep["migrations"]
+    assert moves, "trace must actually migrate"
+    res = audit_recorder(rec)
+    assert res.ok, res.violations[:3]
+    assert res.stats["track_export"] > 0
+    assert res.stats["track_import"] > 0
+    evs = rec.events
+    for m in (e for e in evs if e["kind"] == "migrate"):
+        sid = m["stream"]
+        exps = [e for e in evs if e["kind"] == "track_export"
+                and e["stream"] == sid and e["i"] < m["i"]]
+        imps = [e for e in evs if e["kind"] == "track_import"
+                and e["stream"] == sid and e["i"] > m["i"]]
+        assert exps and imps, sid
+        exp, imp = exps[-1], imps[0]
+        # the destination shard imports the source's exact table ...
+        assert imp["next_id"] == exp["next_id"]
+        assert imp["tids"] == exp["tids"]
+        assert imp["shard"] == m["dst"] != exp["shard"] == m["src"]
+        # ... and a track id born BEFORE the boundary shows up again in
+        # responses the DESTINATION shard emitted after the move
+        surviving = set(exp["tids"])
+        assert surviving
+        post_rids = {e["rid"] for e in evs
+                     if e["kind"] in ("emit", "interp_emit")
+                     and e["stream"] == sid and e["i"] > m["i"]}
+        emitted_after = set()
+        for r in rep["streams"][sid]:
+            if r.rid in post_rids and r.track_ids is not None:
+                emitted_after |= {int(t) for t in np.asarray(r.track_ids)
+                                  if t >= 0}
+        assert surviving & emitted_after, (sid, surviving, emitted_after)
+
+
+def test_reseed_without_carry_fails_continuity_audit():
+    """The pre-refactor behaviour (re-seed at epoch boundaries),
+    reproduced via ``carry_tracks=False``, must TRIP the new audit
+    rule — the invariant genuinely distinguishes the two."""
+    rep, rec = migration_run(carry_tracks=False)
+    assert rep["migrations"]
+    res = audit_recorder(rec)
+    assert any(v["rule"] == "track_continuity" for v in res.violations), \
+        res.violations
 
 
 # ------------------------------------------- randomized fault chaos

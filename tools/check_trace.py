@@ -4,7 +4,14 @@ the stack's invariants (``repro.obs.audit``):
 1. frame conservation — arrived == emitted + dropped + lost,
 2. per-stream emit monotonicity,
 3. no dispatch to a dead replica,
-4. loans LIFO-returned (and all returned by trace end).
+4. loans LIFO-returned (and all returned by trace end),
+5. model switches only at micro-batch boundaries,
+6. ROI containment — second-pass windows/detections stay inside the
+   parent frame,
+7. track-identity continuity — a ``track_import`` must reproduce the
+   stream's latest ``track_export`` (same ``next_id`` + confirmed id
+   set), and a migrated stream must import its exported table before
+   emitting again (a re-seeded tracker fails this).
 
 Accepts either trace serialization:
 
